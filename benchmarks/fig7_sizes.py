@@ -1,0 +1,38 @@
+"""Paper Fig. 7: input-size sweep — hybrid vs LSD vs XLA sort crossover.
+
+The paper: CUB has an edge below ~1.9M keys (constant overheads); the hybrid
+sort wins above.  We report the same sweep on uniform and on the hybrid's
+worst-case (zero-entropy) distribution.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import hybrid_sort, lsd_sort, default_config
+from repro.data.distributions import entropy_keys, constant_keys
+from benchmarks.common import timeit, row
+
+
+def main(fast: bool = True):
+    rng = np.random.default_rng(1)
+    cfg = default_config(4)
+    tops = 20 if fast else 22
+    for logn in range(14, tops + 1, 2):
+        n = 1 << logn
+        for dist, x in (("uniform", entropy_keys(rng, n, 0)),
+                        ("const", constant_keys(n, 7))):
+            xj = jnp.asarray(x)
+            t_h = timeit(lambda: hybrid_sort(xj, cfg=cfg))
+            t_l = timeit(lambda: lsd_sort(xj, d=5))
+            t_x = timeit(lambda: jnp.sort(xj))
+            row(f"fig7/{dist}/n2^{logn}/hybrid", t_h * 1e6,
+                f"rate={n/t_h/1e6:.1f}Mk/s")
+            row(f"fig7/{dist}/n2^{logn}/lsd5", t_l * 1e6,
+                f"rate={n/t_l/1e6:.1f}Mk/s speedup={t_l/t_h:.2f}")
+            row(f"fig7/{dist}/n2^{logn}/xla", t_x * 1e6,
+                f"rate={n/t_x/1e6:.1f}Mk/s")
+
+
+if __name__ == "__main__":
+    main(fast=False)

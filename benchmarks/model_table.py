@@ -1,0 +1,45 @@
+"""Paper §4.5 analytical model + Table 3: memory bounds and expected speedups.
+
+Checks the closed-form bounds against measured bucket counts and reports the
+aux-memory budget for the paper's four configurations.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import (hybrid_sort, memory_budget, expected_speedup,
+                        default_config)
+from repro.core import model as sort_model
+from repro.data.distributions import entropy_keys
+from benchmarks.common import row
+
+
+def main(fast: bool = True):
+    # Table 3 configurations: aux memory <= 5% of M1 and expected speedups
+    for key_b, val_b in ((4, 0), (8, 0), (4, 4), (8, 8)):
+        cfg = default_config(key_b, val_b)
+        n = 2 * 1024**3 // (key_b + val_b)            # the paper's 2 GB input
+        b = memory_budget(n, key_b * 8, cfg)
+        row(f"model/t3_k{key_b*8}v{val_b*8}/aux_frac", 0.0,
+            f"aux/M1={b['aux_over_m1']*100:.2f}% "
+            f"(paper: <=5% for 32-bit config)")
+        row(f"model/t3_k{key_b*8}v{val_b*8}/expected_speedup", 0.0,
+            f"traffic_lsd5_over_hybrid8={expected_speedup(key_b*8, val_b):.3f}")
+
+    # measured bucket counts vs bounds (I1/I3), small-n instrumented run
+    rng = np.random.default_rng(0)
+    n = 1 << 16 if fast else 1 << 20
+    from repro.core import SortConfig
+    cfg = SortConfig(d=8, kpb=256, local_threshold=192, merge_threshold=128)
+    for ands in (0, 3):
+        x = jnp.asarray(entropy_keys(rng, n, ands))
+        _, stats = hybrid_sort(x, cfg=cfg, return_stats=True)
+        bound = sort_model.max_total_buckets(n, cfg)
+        row(f"model/bounds/ands{ands}", 0.0,
+            f"segments={int(stats.num_segments)} I3_bound={bound} "
+            f"holds={int(stats.num_segments) <= bound}")
+
+
+if __name__ == "__main__":
+    main(fast=False)

@@ -1,0 +1,46 @@
+"""Beyond-paper integration benchmark: sort-based vs dense MoE dispatch.
+
+The paper's counting pass vs the GShard one-hot einsum, at qwen3-moe and
+kimi-k2 routing shapes (scaled for CPU).  Derived column: the dispatch-side
+memory-traffic model — dense dispatch writes a (T, E, C) mask against the
+sort path's O(T) partition — the same 'fewer passes over memory' argument as
+the paper's Fig. 6, applied to MoE.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.models.moe import init_moe, moe_layer
+from benchmarks.common import timeit, row
+
+
+def main(fast: bool = True):
+    key = jax.random.PRNGKey(0)
+    t = 1 << 10 if fast else 1 << 13
+    for arch, experts, topk in (("qwen3_moe_30b_a3b", 128, 8),
+                                ("kimi_k2_1t_a32b", 384, 8)):
+        cfg = get_smoke_config(arch)
+        cfg = dataclasses.replace(cfg, num_experts=experts, top_k=topk,
+                                  d_ff=64)
+        params = init_moe(key, cfg, jnp.float32)
+        x = jax.random.normal(key, (1, t, cfg.d_model), jnp.float32)
+
+        for disp in ("sort", "dense"):
+            c = dataclasses.replace(cfg, moe_dispatch=disp)
+            fn = jax.jit(lambda p, xx, c=c: moe_layer(p, xx, c)[0])
+            tt = timeit(fn, params, x)
+            cap = max(4, int(c.capacity_factor * t * topk / experts))
+            mask_bytes = t * topk * experts * cap * 4 if disp == "dense" else 0
+            sort_bytes = t * topk * 4 * 3
+            row(f"moe/{arch}/{disp}", tt * 1e6,
+                f"experts={experts} topk={topk} tokens={t} "
+                f"dispatch_model_bytes={(mask_bytes or sort_bytes)/1e6:.1f}MB")
+
+
+if __name__ == "__main__":
+    main(fast=False)

@@ -1,0 +1,64 @@
+"""Roofline table generator: reads artifacts/dryrun/*.json into the
+EXPERIMENTS.md §Roofline table (one row per arch x shape x mesh)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import row
+
+
+def load(out_dir: str = "artifacts/dryrun"):
+    arts = []
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        if path.endswith("summary.json"):
+            continue
+        with open(path) as f:
+            arts.append(json.load(f))
+    return arts
+
+
+def markdown_table(arts, mesh: str = "pod") -> str:
+    lines = [
+        "| arch | shape | step | t_comp (ms) | t_mem (ms) | t_coll (ms) | "
+        "bottleneck | useful/HLO flops | MFU bound | GiB/chip | fits 16G |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for a in arts:
+        if a.get("mesh") != mesh:
+            continue
+        if not a.get("ok"):
+            lines.append(f"| {a['arch']} | {a['shape']} | - | - | - | - | "
+                         f"{a.get('skipped', a.get('error', '?'))[:40]} | - | - | - | - |")
+            continue
+        lines.append(
+            f"| {a['arch']} | {a['shape']} | {a['step']} "
+            f"| {a['t_compute_s']*1e3:.2f} | {a['t_memory_s']*1e3:.2f} "
+            f"| {a['t_collective_s']*1e3:.2f} | {a['bottleneck']} "
+            f"| {a['useful_flops_frac']:.3f} | {a['mfu_bound']*100:.1f}% "
+            f"| {a['mem_per_chip_gib']:.2f} | {'y' if a['fits_16gib'] else 'N'} |")
+    return "\n".join(lines)
+
+
+def main(fast: bool = True):
+    arts = load()
+    if not arts:
+        row("roofline/missing", 0.0, "run python -m repro.launch.dryrun --all first")
+        return
+    for a in arts:
+        if not a.get("ok"):
+            row(f"roofline/{a['mesh']}/{a['arch']}/{a['shape']}", 0.0,
+                f"SKIP:{a.get('skipped', a.get('error','?'))[:50]}".replace(",", ";"))
+            continue
+        row(f"roofline/{a['mesh']}/{a['arch']}/{a['shape']}",
+            a["t_bound_s"] * 1e6 if "t_bound_s" in a else
+            max(a["t_compute_s"], a["t_memory_s"], a["t_collective_s"]) * 1e6,
+            f"bottleneck={a['bottleneck']} mfu_bound={a['mfu_bound']*100:.1f}% "
+            f"mem={a['mem_per_chip_gib']:.2f}GiB fits={int(a['fits_16gib'])}")
+
+
+if __name__ == "__main__":
+    main()
+    print()
+    print(markdown_table(load(), "pod"))

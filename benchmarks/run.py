@@ -1,0 +1,39 @@
+"""Benchmark runner: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  ``--full`` uses paper-scale sizes
+(slow on one CPU core); the default is a reduced but structurally identical
+sweep.  ``python -m benchmarks.run [--full] [--only fig6,...]``
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+MODULES = ["fig2_histogram", "fig6_entropy", "fig7_sizes", "fig8_pipeline",
+           "fig10_latest", "ablations", "model_table", "moe_dispatch",
+           "roofline"]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    only = args.only.split(",") if args.only else None
+
+    print("name,us_per_call,derived")
+    for name in MODULES:
+        if only and not any(name.startswith(o) for o in only):
+            continue
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["main"])
+            mod.main(fast=not args.full)
+        except Exception as e:
+            traceback.print_exc(file=sys.stderr)
+            print(f"{name}/ERROR,0.0,{type(e).__name__}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+"""Distributed sort example (paper §5 on a TPU mesh): 8 chips sort 2M keys.
+
+Shows the full pipeline — local hybrid sort, sampled splitters, capacity-
+padded all_to_all, multiway merge — including the pipelined (chunked) variant.
+
+    PYTHONPATH=src python examples/distributed_sort.py
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.distributed import make_distributed_sort
+
+mesh = jax.make_mesh((8,), ("data",))
+rng = np.random.default_rng(0)
+n = 1 << 21
+
+for name, ands, chunks in (("uniform s=1", 0, 1), ("skewed s=1", 3, 1),
+                           ("uniform s=4 (pipelined)", 0, 4)):
+    x = rng.integers(0, 2**32, n, dtype=np.uint32)
+    for _ in range(ands):
+        x &= rng.integers(0, 2**32, n, dtype=np.uint32)
+    fn = jax.jit(make_distributed_sort(mesh, "data", num_chunks=chunks))
+    out, valid, over = map(np.asarray, fn(jnp.asarray(x)))
+    per = out.reshape(8, -1)
+    got = np.concatenate([per[i][: valid[i]] for i in range(8)])
+    ok = np.array_equal(np.sort(x), got)
+    print(f"{name:24s} n={n} ok={ok} overflow={bool(over.any())} "
+          f"shard fill={valid.mean()/per.shape[1]:.2f}")

@@ -1,0 +1,44 @@
+import numpy as np
+import jax
+import jax.numpy as jnp
+import sys
+sys.path.insert(0, "src")
+from repro.core import hybrid_sort, lsd_sort, SortConfig
+
+rng = np.random.default_rng(0)
+
+# tiny threshold config so counting passes actually happen at small n
+cfg = SortConfig(d=8, kpb=64, local_threshold=48, merge_threshold=32)
+
+for n in [0, 1, 2, 7, 100, 1000, 20000]:
+    x = rng.integers(0, 2**32, size=n, dtype=np.uint32)
+    out, stats = hybrid_sort(jnp.asarray(x), cfg=cfg, return_stats=True) if n else (jnp.asarray(x), None)
+    ok = np.array_equal(np.sort(x), np.asarray(out))
+    print(f"n={n:6d} ok={ok} stats={stats}")
+    assert ok, f"FAIL n={n}"
+
+# values, skew, int32, float32
+n = 5000
+for name, x in [
+    ("uniform_u32", rng.integers(0, 2**32, n, dtype=np.uint32)),
+    ("skew_and3", rng.integers(0, 2**32, n, dtype=np.uint32)
+                  & rng.integers(0, 2**32, n, dtype=np.uint32)
+                  & rng.integers(0, 2**32, n, dtype=np.uint32)),
+    ("const", np.full(n, 12345, dtype=np.uint32)),
+    ("int32", rng.integers(-2**31, 2**31, n).astype(np.int32)),
+    ("f32", rng.standard_normal(n).astype(np.float32)),
+]:
+    v = np.arange(n, dtype=np.int32)
+    ks, vs, stats = hybrid_sort(jnp.asarray(x), jnp.asarray(v), cfg=cfg, return_stats=True)
+    ks, vs = np.asarray(ks), np.asarray(vs)
+    assert np.array_equal(np.sort(x), ks), f"keys FAIL {name}"
+    assert np.array_equal(x[vs], ks), f"pair consistency FAIL {name}"
+    print(f"{name:12s} passes={stats.counting_passes} local={stats.used_local_sort} segs={stats.num_segments}")
+
+# LSD baseline
+x = rng.integers(0, 2**32, 4096, dtype=np.uint32)
+assert np.array_equal(np.sort(x), np.asarray(lsd_sort(jnp.asarray(x), d=5)))
+x = rng.standard_normal(3000).astype(np.float32)
+assert np.allclose(np.sort(x), np.asarray(lsd_sort(jnp.asarray(x), d=4)))
+print("LSD ok")
+print("SMOKE OK")

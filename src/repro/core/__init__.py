@@ -1,0 +1,21 @@
+"""repro.core — the paper's contribution: a hybrid MSD radix sort for TPUs.
+
+Public API:
+  hybrid_sort        — §4: the memory-bandwidth-efficient hybrid radix sort
+  lsd_sort           — §3 baseline (CUB analogue, stable LSD passes)
+  SortConfig         — tuning knobs (Table 3 defaults)
+  counting_partition — single counting-sort pass (MoE dispatch building block)
+  segmented_sort     — batched independent sorts
+  distributed_sort   — §5: multi-chip pipelined sort (shard_map)
+"""
+from repro.core.bijection import to_ordered_bits, from_ordered_bits, key_bits
+from repro.core.hybrid import hybrid_sort, SortStats
+from repro.core.lsd import lsd_sort
+from repro.core.model import (SortConfig, default_config, memory_budget,
+                              pass_counts, expected_speedup)
+
+__all__ = [
+    "hybrid_sort", "lsd_sort", "SortStats", "SortConfig", "default_config",
+    "memory_budget", "pass_counts", "expected_speedup",
+    "to_ordered_bits", "from_ordered_bits", "key_bits",
+]

@@ -1,0 +1,79 @@
+"""Order-preserving bijections from primitive key types to unsigned bit-strings.
+
+Paper §4.6: radix sorting operates on unsigned integers; signed ints and IEEE
+floats are mapped to an order-preserving unsigned representation before the
+first counting-sort pass and mapped back during the local sort / last pass
+(Herf, "Radix tricks", 2001).
+
+  * unsigned ints: identity
+  * signed ints:   flip the sign bit
+  * floats:        if sign bit set -> flip ALL bits, else -> flip sign bit only
+
+All functions are jit-safe and shape-preserving.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# dtype -> (unsigned carrier dtype, key bit width)
+_CARRIER = {
+    jnp.dtype(jnp.uint8): (jnp.uint8, 8),
+    jnp.dtype(jnp.uint16): (jnp.uint16, 16),
+    jnp.dtype(jnp.uint32): (jnp.uint32, 32),
+    jnp.dtype(jnp.uint64): (jnp.uint64, 64),
+    jnp.dtype(jnp.int8): (jnp.uint8, 8),
+    jnp.dtype(jnp.int16): (jnp.uint16, 16),
+    jnp.dtype(jnp.int32): (jnp.uint32, 32),
+    jnp.dtype(jnp.int64): (jnp.uint64, 64),
+    jnp.dtype(jnp.float32): (jnp.uint32, 32),
+    jnp.dtype(jnp.float64): (jnp.uint64, 64),
+    jnp.dtype(jnp.bfloat16): (jnp.uint16, 16),
+    jnp.dtype(jnp.float16): (jnp.uint16, 16),
+}
+
+
+def key_bits(dtype) -> int:
+    """Number of key bits k for a supported key dtype."""
+    return _CARRIER[jnp.dtype(dtype)][1]
+
+
+def carrier_dtype(dtype):
+    """Unsigned dtype the radix sort runs on for a given key dtype."""
+    return _CARRIER[jnp.dtype(dtype)][0]
+
+
+def _sign_mask(udtype):
+    bits = key_bits(udtype)
+    return jnp.array(1, dtype=udtype) << (bits - 1)
+
+
+def to_ordered_bits(keys: jnp.ndarray) -> jnp.ndarray:
+    """Map keys of any supported dtype to order-preserving unsigned bits."""
+    dt = jnp.dtype(keys.dtype)
+    if dt not in _CARRIER:
+        raise TypeError(f"unsupported key dtype {dt}")
+    udtype, _ = _CARRIER[dt]
+    if jnp.issubdtype(dt, jnp.unsignedinteger):
+        return keys.astype(udtype)
+    bits = keys.view(udtype) if not jnp.issubdtype(dt, jnp.unsignedinteger) else keys
+    sign = _sign_mask(udtype)
+    if jnp.issubdtype(dt, jnp.signedinteger):
+        return bits ^ sign
+    # floating point: two's-complement-style total order (NaNs land at extremes)
+    neg = (bits & sign) != 0
+    return jnp.where(neg, ~bits, bits ^ sign)
+
+
+def from_ordered_bits(ubits: jnp.ndarray, dtype) -> jnp.ndarray:
+    """Inverse of :func:`to_ordered_bits`."""
+    dt = jnp.dtype(dtype)
+    udtype, _ = _CARRIER[dt]
+    ubits = ubits.astype(udtype)
+    if jnp.issubdtype(dt, jnp.unsignedinteger):
+        return ubits.astype(dt)
+    sign = _sign_mask(udtype)
+    if jnp.issubdtype(dt, jnp.signedinteger):
+        return (ubits ^ sign).view(dt)
+    was_neg = (ubits & sign) == 0  # encoded negatives have sign bit cleared
+    bits = jnp.where(was_neg, ~ubits, ubits ^ sign)
+    return bits.view(dt)

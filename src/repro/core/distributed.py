@@ -1,0 +1,139 @@
+"""Distributed sorting across a device mesh (paper §5, re-derived for TPU).
+
+The paper's heterogeneous sort pipelines PCIe H2D / on-GPU sort / D2H over s
+chunks and merges the sorted runs on the CPU.  On a TPU pod the slow link is
+ICI (chip-to-chip) instead of PCIe and the merge lives next to the exchange.
+The structure is isomorphic:
+
+  paper (Figs. 4/5)                     this module
+  ---------------------------------     ------------------------------------
+  split input into s chunks             split each shard's data into s chunks
+  H2D transfer of chunk i+1             all_to_all exchange of chunk i+1
+    overlapped with on-GPU sort of        overlapped with local hybrid sort /
+    chunk i (full-duplex PCIe)            merge of chunk i (bidirectional ICI;
+                                          XLA latency-hiding scheduler)
+  in-place replacement of returned      XLA buffer donation/reuse of the
+    chunk memory (Fig. 5)                 exchanged chunk buffers
+  CPU parallel multiway merge           per-shard multiway merge of received
+                                          sorted runs (merge-path via
+                                          vectorised binary search)
+
+Shard splitters are *sample-based* (deterministic sample sort — Dehne &
+Zaboli, cited §1) with duplicate-only rank interleaving, so only exactly-equal
+keys are split across shards and global order is preserved for any
+distribution — the zero-entropy case degrades to zero exchange traffic.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import bijection, model
+from repro.core.hybrid import hybrid_sort
+from repro.core.segmented import counting_partition, multiway_merge
+
+
+def _make_splitters(local_sample, axis_name: str):
+    """Global shard splitters from a regular sample of the sorted local data
+    (deterministic sample sort)."""
+    nshards = jax.lax.axis_size(axis_name)
+    gsample = jax.lax.all_gather(local_sample, axis_name).reshape(-1)
+    gsample = jnp.sort(gsample)
+    step = gsample.shape[0] // nshards
+    return gsample[step::step][: nshards - 1]
+
+
+def _dest_shards(sorted_ukeys, splitters, axis_name: str):
+    """Destination shard per (locally sorted) key.
+
+    Ties with splitter values are cycled across their allowed shard range —
+    safe, because only equal keys ever cross a splitter boundary, and it keeps
+    the per-(source, dest) load <= chunk/spread so the static all_to_all
+    capacity holds even for the constant (zero-entropy) distribution.
+    """
+    nshards = jax.lax.axis_size(axis_name)
+    my = jax.lax.axis_index(axis_name)
+    n_local = sorted_ukeys.shape[0]
+    lo = jnp.searchsorted(splitters, sorted_ukeys, side="left").astype(jnp.int32)
+    hi = jnp.searchsorted(splitters, sorted_ukeys, side="right").astype(jnp.int32)
+    spread = hi - lo + 1
+    first = jnp.searchsorted(sorted_ukeys, sorted_ukeys, side="left")
+    tie_rank = jnp.arange(n_local, dtype=jnp.int32) - first.astype(jnp.int32)
+    dest = lo + (tie_rank + my) % spread
+    return dest, nshards
+
+
+def _exchange(sorted_ukeys, dest_shard, nshards: int, capacity: int, sentinel,
+              axis_name: str):
+    """Partition by destination shard (one counting pass, §4.1), pad to the
+    static all_to_all capacity, exchange keys and validity counts."""
+    part = counting_partition(dest_shard, nshards)
+    position = part.dest - part.offsets[dest_shard]
+    kept = position < capacity
+    slot = jnp.where(kept, dest_shard * capacity + position, nshards * capacity)
+    buf = jnp.full((nshards * capacity + 1,), sentinel, sorted_ukeys.dtype)
+    buf = buf.at[slot].set(sorted_ukeys, mode="drop")
+    send = buf[:-1].reshape(nshards, capacity)
+    sent_counts = jnp.minimum(part.counts, capacity)
+    recv = jax.lax.all_to_all(send, axis_name, split_axis=0, concat_axis=0)
+    recv_counts = jax.lax.all_to_all(sent_counts.reshape(nshards, 1), axis_name,
+                                     split_axis=0, concat_axis=0)
+    overflow = (part.counts > capacity).any()
+    return recv, recv_counts.sum(), overflow
+
+
+def make_distributed_sort(mesh, axis_name: str = "data", *,
+                          oversample: int = 64, slack: float = 2.0,
+                          num_chunks: int = 1,
+                          cfg: Optional[model.SortConfig] = None,
+                          spec: Optional[P] = None):
+    """Build a shard_map'd distributed sort over one mesh axis.
+
+    Returns fn: (n_local,) keys per shard -> (padded sorted keys per shard,
+    (1,) valid count per shard, (1,) overflow flag per shard).  The first
+    ``valid`` entries of consecutive shards concatenate to the global sorted
+    sequence.  ``num_chunks > 1`` enables the §5 pipelined schedule.
+    """
+    spec = spec if spec is not None else P(axis_name)
+
+    def dsort(keys):
+        ukeys = bijection.to_ordered_bits(keys)
+        sentinel = ~jnp.zeros((), ukeys.dtype)   # all-ones == top of key order
+        n_local = ukeys.shape[0]
+        chunk = n_local // num_chunks
+        nshards = mesh.shape[axis_name]
+        capacity = max(1, int(slack * chunk / nshards))
+
+        # stage 1 (paper: on-GPU sort of each chunk): local hybrid sorts
+        pieces = [hybrid_sort(ukeys[c * chunk:(c + 1) * chunk], cfg=cfg)
+                  for c in range(num_chunks)]
+        # one consistent splitter set across all chunks
+        m = max(1, min(nshards * oversample // num_chunks, chunk))
+        stride = max(chunk // m, 1)
+        sample = jnp.concatenate([p[::stride][:m] for p in pieces])
+        splitters = _make_splitters(sample, axis_name)
+
+        # stage 2/3 (paper: pipelined transfer + merge): exchange chunk c+1
+        # overlaps the merge of chunk c — no data dependency between them
+        runs, counts, over = [], [], []
+        for piece in pieces:
+            dest, _ = _dest_shards(piece, splitters, axis_name)
+            recv, cnt, ov = _exchange(piece, dest, nshards, capacity,
+                                      sentinel, axis_name)
+            # each received row is a sorted run (stable partition of sorted
+            # input) -> multiway merge, not a re-sort
+            runs.append(multiway_merge(recv))
+            counts.append(cnt)
+            over.append(ov)
+        merged = runs[0] if num_chunks == 1 else multiway_merge(jnp.stack(runs))
+        valid = functools.reduce(jnp.add, counts)
+        overflow = functools.reduce(jnp.logical_or, over)
+        out = bijection.from_ordered_bits(merged, keys.dtype)
+        return out, valid.reshape(1), overflow.reshape(1)
+
+    return jax.shard_map(dsort, mesh=mesh, in_specs=(spec,),
+                         out_specs=(spec, spec, spec), check_vma=False)

@@ -1,0 +1,202 @@
+"""The hybrid MSD radix sort (paper §4) as a composable JAX transform.
+
+Algorithm (faithful to §4.1–§4.5):
+
+  * counting-sort passes proceed from the most-significant d-bit digit; each
+    pass partitions every *active* bucket (size > ∂̂) into up to r = 2^d
+    sub-buckets (R2),
+  * runs of tiny sub-buckets are merged while their total stays below ∂ (R3),
+  * buckets at or below ∂̂ become *done* and are finished by a single local
+    sort that touches device memory only twice (R1),
+  * the loop exits as soon as no active bucket remains (data-dependent trip
+    count — the "finish early" behaviour that yields the 4x uniform-input
+    speedup) or when digits are exhausted,
+  * all bookkeeping arrays are statically sized by the analytical model §4.5
+    (see core.model) — the paper's bounds are what make the algorithm
+    expressible under XLA's static shapes.
+
+Bucket state is carried *per key* (segment ids + done flags), which is the
+dense JAX analogue of the paper's block-assignment lists: monotone seg ids
+over positions encode exactly {b_id, b_offs}, and tile-aligned views of them
+drive the Pallas kernels' scalar prefetch.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import bijection, model
+from repro.core.ranks import stable_partition_dest
+
+
+class SortStats(NamedTuple):
+    counting_passes: jnp.ndarray   # number of executed counting-sort passes
+    used_local_sort: jnp.ndarray   # bool: did the final local sort run
+    num_segments: jnp.ndarray      # segments at exit (I3 bound check)
+    max_segment: jnp.ndarray       # largest segment at exit
+
+
+def _digit_at(ukeys: jnp.ndarray, pass_idx, k: int, d: int) -> jnp.ndarray:
+    """MSD digit for pass ``pass_idx`` (0 = most significant); handles k % d != 0."""
+    udt = ukeys.dtype
+    hi = k - pass_idx * d
+    width = jnp.minimum(d, hi)
+    lo = (hi - width).astype(udt)
+    mask = ((jnp.array(1, udt) << width.astype(udt)) - 1).astype(udt)
+    return ((ukeys >> lo) & mask).astype(jnp.int32)
+
+
+def _merge_rows(hist: jnp.ndarray, local_threshold: int, merge_threshold: int):
+    """Apply R3 to each active bucket's sub-bucket size row.
+
+    Returns (group_start, group_done): (A, r) bools — whether sub-bucket v
+    starts a new (merged) bucket, and whether that bucket is finished (<= ∂̂).
+    """
+    def row(s_row):
+        def step(carry, s):
+            acc, gid = carry
+            big = s > local_threshold
+            extend = (s == 0) | ((~big) & (acc + s < merge_threshold))
+            ngid = jnp.where(extend, gid, gid + 1)
+            nacc = jnp.where(extend, acc + s,
+                             jnp.where(big, merge_threshold, s))
+            return (nacc, ngid), (~extend, ~big)
+        (_, _), (gstart, gdone) = lax.scan(
+            step, (jnp.int32(merge_threshold), jnp.int32(0)), s_row)
+        return gstart, gdone
+    return jax.vmap(row)(hist)
+
+
+def _counting_pass(ukeys, vals, seg_id, done, pass_idx, *, k, d, a_max, cfg):
+    """One counting-sort pass over all active buckets simultaneously."""
+    n = ukeys.shape[0]
+    r = 1 << d
+    digit = _digit_at(ukeys, pass_idx, k, d)
+    active = ~done
+    boundary = jnp.concatenate([jnp.ones((1,), bool),
+                                seg_id[1:] != seg_id[:-1]])
+    astart = boundary & active
+    asid = jnp.cumsum(astart.astype(jnp.int32)) - 1          # active-segment index
+    # (a, digit) histogram — only active keys contribute (M2 of the model)
+    idx = jnp.where(active, asid * r + digit, 0)
+    hist = jnp.zeros((a_max * r,), jnp.int32).at[idx].add(active.astype(jnp.int32))
+    hist = hist.reshape(a_max, r)
+    active_base = jnp.nonzero(astart, size=a_max, fill_value=n)[0].astype(jnp.int32)
+
+    # destination permutation: stable partition by (active segment, digit);
+    # done keys carry a +inf-like composite and stay in place.
+    sentinel = jnp.int32(a_max * r)
+    composite = jnp.where(active, asid * r + digit, sentinel)
+    perm = jnp.argsort(composite, stable=True)
+    slots = jnp.argsort(done, stable=True).astype(jnp.int32)  # active slots asc, then done slots asc
+    dest = jnp.zeros((n,), jnp.int32).at[perm].set(slots)
+
+    new_keys = jnp.zeros_like(ukeys).at[dest].set(ukeys)
+    new_vals = jax.tree.map(lambda v: jnp.zeros_like(v).at[dest].set(v), vals)
+
+    # bucket bookkeeping: merged-group starts (R3) become the new boundaries
+    gstart, gdone = _merge_rows(hist, cfg.local_threshold, cfg.merge_threshold)
+    excl = jnp.cumsum(hist, axis=1) - hist
+    dest_base = active_base[:, None] + excl                   # (a_max, r)
+
+    nb = jnp.zeros((n,), bool)
+    keep = boundary & done                                    # done buckets persist in place
+    nb = nb.at[jnp.where(keep, jnp.arange(n), n)].set(True, mode="drop")
+    nb = nb.at[jnp.where(gstart.reshape(-1), dest_base.reshape(-1), n)].set(True, mode="drop")
+    nb = nb.at[0].set(True)
+    new_seg = (jnp.cumsum(nb.astype(jnp.int32)) - 1)
+
+    key_gdone = gdone.reshape(-1)[idx]
+    new_done = jnp.zeros((n,), bool).at[dest].set(jnp.where(active, key_gdone, True))
+    return new_keys, new_vals, new_seg, new_done
+
+
+def _local_sort(ukeys, vals, seg_id):
+    """Finish all buckets in one read+write: sort by (bucket, remaining key).
+
+    Keys within a bucket share their already-processed digit prefix, so
+    ordering by the full key equals ordering by the remaining digits — this is
+    the LSD-on-remaining-digits local sort of §4.1, realised as a segmented
+    sort (the Pallas bitonic kernel is the on-TPU tile engine for it).
+    """
+    perm = jnp.lexsort((ukeys, seg_id))
+    return ukeys[perm], jax.tree.map(lambda v: v[perm], vals)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "k", "return_stats", "max_passes"))
+def _hybrid_sort_bits(ukeys, vals, cfg: model.SortConfig, k: int,
+                      return_stats: bool, max_passes: Optional[int] = None):
+    n = ukeys.shape[0]
+    d = cfg.d
+    nd = model.num_digits(k, d)
+    if max_passes is not None:
+        nd = min(nd, max_passes)
+    a_max = model.max_active_buckets(n, cfg)
+
+    done0 = jnp.full((n,), n <= cfg.local_threshold)
+    seg0 = jnp.zeros((n,), jnp.int32)
+
+    def cond(state):
+        _, _, _, done, p = state
+        return (p < nd) & jnp.any(~done)
+
+    def body(state):
+        ukeys, vals, seg, done, p = state
+        ukeys, vals, seg, done = _counting_pass(
+            ukeys, vals, seg, done, p, k=k, d=d, a_max=a_max, cfg=cfg)
+        return ukeys, vals, seg, done, p + 1
+
+    ukeys, vals, seg, done, p = lax.while_loop(
+        cond, body, (ukeys, vals, seg0, done0, jnp.int32(0)))
+
+    needs_local = jnp.any(done)
+    ukeys, vals = lax.cond(needs_local, _local_sort,
+                           lambda k_, v_, s_: (k_, v_), ukeys, vals, seg)
+    if not return_stats:
+        return ukeys, vals, None
+    sizes = jnp.bincount(seg, length=n if n else 1)
+    stats = SortStats(counting_passes=p, used_local_sort=needs_local,
+                      num_segments=seg[-1] + 1 if n else jnp.int32(0),
+                      max_segment=sizes.max())
+    return ukeys, vals, stats
+
+
+def hybrid_sort(keys: jnp.ndarray, values: Any = None,
+                cfg: Optional[model.SortConfig] = None,
+                return_stats: bool = False, max_passes: Optional[int] = None):
+    """Sort ``keys`` (any supported primitive dtype) with the hybrid radix sort.
+
+    ``values`` is an optional array or pytree of arrays permuted alongside the
+    keys (decomposed key-value layout, §4.6).  Pair movement is consistent but
+    — by the paper's central design choice — NOT stable across equal keys.
+
+    Returns ``sorted_keys``, or ``(sorted_keys, permuted_values)`` if values
+    were given; append ``stats`` when ``return_stats``.
+    """
+    if keys.ndim != 1:
+        raise ValueError("hybrid_sort expects a 1-D key array")
+    k = bijection.key_bits(keys.dtype)
+    if k > 32 and not jax.config.jax_enable_x64:
+        raise RuntimeError("64-bit keys require jax_enable_x64")
+    cfg = cfg or model.default_config(k // 8)
+    n = keys.shape[0]
+    if n == 0:
+        out = (keys, values) if values is not None else keys
+        if return_stats:
+            z = jnp.int32(0)
+            return (*((out,) if values is None else out),
+                    SortStats(z, jnp.bool_(False), z, z))
+        return out
+
+    ukeys = bijection.to_ordered_bits(keys)
+    vals = values if values is not None else ()
+    ukeys, vals, stats = _hybrid_sort_bits(ukeys, vals, cfg, k, return_stats,
+                                           max_passes)
+    out_keys = bijection.from_ordered_bits(ukeys, keys.dtype)
+    if values is None:
+        return (out_keys, stats) if return_stats else out_keys
+    return (out_keys, vals, stats) if return_stats else (out_keys, vals)

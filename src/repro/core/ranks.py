@@ -1,0 +1,87 @@
+"""Stable-partition rank/permutation engines for counting-sort passes.
+
+A counting-sort pass needs, for every key, its destination slot: keys are
+grouped by bucket id (digit value, possibly composite with a segment id) with
+ties broken by input position (stability *within a pass* — the paper drops
+stability *across* passes, not within one partitioning step).
+
+Two engines compute the same permutation:
+
+  * ``argsort`` — one XLA stable sort of the composite id.  O(n log n)
+    comparisons but a single fused, heavily-optimised op; the default on CPU
+    (and a perfectly good TPU fallback).
+  * ``scan``    — the paper-faithful O(n) two-level scheme: per-chunk
+    histograms + in-chunk ranks (what the Pallas kernels implement per tile),
+    with a carried running histogram across chunks.  Used by tests to validate
+    the kernel math and available for small radices.
+
+Both return ``dest`` with the meaning: element i moves to slot ``dest[i]``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def invert_permutation(perm: jnp.ndarray) -> jnp.ndarray:
+    """dest[i] such that sorted[dest[i]] = x[i], given perm = argsort order."""
+    n = perm.shape[0]
+    return jnp.zeros((n,), dtype=perm.dtype).at[perm].set(jnp.arange(n, dtype=perm.dtype))
+
+
+def stable_partition_dest_argsort(bucket: jnp.ndarray) -> jnp.ndarray:
+    """Destination slots of a stable partition by ``bucket`` (int array)."""
+    perm = jnp.argsort(bucket, stable=True)
+    return invert_permutation(perm)
+
+
+@functools.partial(jax.jit, static_argnames=("num_buckets", "chunk"))
+def stable_partition_dest_scan(bucket: jnp.ndarray, num_buckets: int,
+                               chunk: int = 2048) -> jnp.ndarray:
+    """O(n) counting-rank engine: chunked scan with a carried histogram.
+
+    Mirrors the TPU kernel structure: per-chunk one-hot histogram (MXU-shaped),
+    in-chunk exclusive cumulative count, global exclusive bucket offsets, and a
+    cross-chunk carry — the jnp analogue of the paper's block histograms (M3)
+    plus the scatter offsets.
+    """
+    n = bucket.shape[0]
+    if n == 0:
+        return jnp.zeros((0,), jnp.int32)
+    pad = (-n) % chunk
+    b = jnp.pad(bucket.astype(jnp.int32), (0, pad), constant_values=num_buckets)
+    nb = num_buckets + 1  # one trash bucket for padding
+    tiles = b.reshape(-1, chunk)
+
+    def tile_hist(row):
+        return jnp.zeros((nb,), jnp.int32).at[row].add(1)
+
+    hists = jax.vmap(tile_hist)(tiles)                       # (T, nb)
+    total = hists.sum(axis=0)
+    # global exclusive offsets per bucket
+    g_off = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                             jnp.cumsum(total)[:-1].astype(jnp.int32)])
+    # exclusive-over-tiles carry per bucket
+    carry = jnp.concatenate([jnp.zeros((1, nb), jnp.int32),
+                             jnp.cumsum(hists, axis=0)[:-1].astype(jnp.int32)])
+
+    def tile_ranks(row, carry_row):
+        onehot = jax.nn.one_hot(row, nb, dtype=jnp.int32)    # (chunk, nb)
+        incl = jnp.cumsum(onehot, axis=0)
+        excl = incl - onehot                                 # rank within tile
+        in_tile = jnp.take_along_axis(excl, row[:, None], axis=1)[:, 0]
+        return g_off[row] + carry_row[row] + in_tile
+
+    dest = jax.vmap(tile_ranks)(tiles, carry).reshape(-1)
+    return dest[:n]
+
+
+def stable_partition_dest(bucket: jnp.ndarray, num_buckets: int,
+                          engine: str = "argsort") -> jnp.ndarray:
+    if engine == "argsort":
+        return stable_partition_dest_argsort(bucket)
+    if engine == "scan":
+        return stable_partition_dest_scan(bucket, num_buckets)
+    raise ValueError(f"unknown rank engine {engine!r}")

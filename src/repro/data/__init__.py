@@ -1,0 +1,5 @@
+from repro.data.pipeline import SyntheticLMData, length_bucketed_batches
+from repro.data.distributions import entropy_keys, zipf_keys
+
+__all__ = ["SyntheticLMData", "length_bucketed_batches", "entropy_keys",
+           "zipf_keys"]

@@ -1,0 +1,34 @@
+"""Key-distribution generators for the paper's benchmarks (§6).
+
+``entropy_keys`` implements the Thearling & Smith entropy-reduction benchmark:
+repeatedly AND uniform draws; for 32-bit keys 0..3 ANDs give entropies of
+32.00, 25.95, 17.41, 10.78 bits (the paper's x-axis).  ``zipf_keys`` matches
+the PARADIS comparison (§6.2).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+ENTROPY_BITS_32 = {0: 32.0, 1: 25.95, 2: 17.41, 3: 10.78, 4: 6.42, 5: 3.68,
+                   6: 2.07, 7: 1.15, 8: 0.63, 9: 0.34, 10: 0.18}
+
+
+def entropy_keys(rng: np.random.Generator, n: int, ands: int,
+                 dtype=np.uint32) -> np.ndarray:
+    info = np.iinfo(dtype)
+    x = rng.integers(0, info.max, n, dtype=dtype, endpoint=True)
+    for _ in range(ands):
+        x &= rng.integers(0, info.max, n, dtype=dtype, endpoint=True)
+    return x
+
+
+def constant_keys(n: int, value: int = 0, dtype=np.uint32) -> np.ndarray:
+    return np.full(n, value, dtype=dtype)
+
+
+def zipf_keys(rng: np.random.Generator, n: int, a: float = 1.2,
+              dtype=np.uint32) -> np.ndarray:
+    info = np.iinfo(dtype)
+    x = rng.zipf(a, n)
+    return np.minimum(x, info.max).astype(dtype)

@@ -1,0 +1,18 @@
+"""Pallas TPU kernels for the hybrid radix sort's compute hot spots.
+
+histogram   — one-hot MXU contraction histogram (§4.3's atomics, TPU-native)
+multisplit  — in-VMEM tile partition + write combining (§4.4 / Fig. 3)
+bitonic     — VMEM local sort (§4.1's local sort; CUB BlockRadixSort analogue)
+assigned    — scalar-prefetch block descriptors (§4.2 constant-invocation trick)
+ops         — jit'd composition into full counting passes
+ref         — pure-jnp oracles
+"""
+from repro.kernels.histogram import radix_histogram
+from repro.kernels.multisplit import tile_multisplit, tile_multisplit_kv
+from repro.kernels.bitonic import bitonic_sort_rows, bitonic_sort_rows_kv
+from repro.kernels.assigned import assigned_histogram
+from repro.kernels.ops import kernel_counting_pass, kernel_local_sort
+
+__all__ = ["radix_histogram", "tile_multisplit", "tile_multisplit_kv", "bitonic_sort_rows",
+           "bitonic_sort_rows_kv", "assigned_histogram",
+           "kernel_counting_pass", "kernel_local_sort"]

@@ -1,0 +1,77 @@
+"""Jit'd composition of the Pallas kernels into full counting-sort passes.
+
+``kernel_counting_pass`` is the on-TPU engine for one partitioning pass
+(histogram kernel -> global scan -> multisplit kernel -> coalesced run
+copies); the jnp drivers in ``repro.core`` compute the identical permutation
+and serve as its oracle.  On this CPU container the kernels run in interpret
+mode; on real hardware the same code lowers to Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.histogram import radix_histogram
+from repro.kernels.multisplit import tile_multisplit
+from repro.kernels.bitonic import bitonic_sort_rows, bitonic_sort_rows_kv
+
+
+@functools.partial(jax.jit, static_argnames=("shift", "width", "kpb",
+                                             "key_bits", "interpret"))
+def kernel_counting_pass(keys: jnp.ndarray, shift: int, width: int,
+                         key_bits: int, kpb: int = 1024,
+                         interpret: bool = True) -> jnp.ndarray:
+    """One full stable counting-sort pass of a single bucket, kernel-engined.
+
+    Pads to tile granularity with all-ones sentinels (they extract digit r-1
+    and are stably last, so they land in the trailing pad slots and slicing
+    [:n] recovers the real partition).
+    """
+    n = keys.shape[0]
+    pad = (-n) % kpb
+    sentinel = ~jnp.zeros((), keys.dtype)
+    padded = jnp.concatenate([keys, jnp.full((pad,), sentinel, keys.dtype)])
+    tiles = padded.reshape(-1, kpb)
+    t = tiles.shape[0]
+    r = 1 << width
+
+    sorted_tiles, sorted_digit, rank, hist = tile_multisplit(
+        tiles, shift, width, key_bits, interpret=interpret)
+
+    # global offsets: digit-major across the whole array, tile-major within
+    # a digit (the scan the paper stores block histograms for, M3)
+    total = hist.sum(axis=0)                                  # (r,)
+    digit_base = jnp.cumsum(total) - total                    # (r,)
+    tile_carry = jnp.cumsum(hist, axis=0) - hist              # (t, r)
+    base = digit_base[None, :] + tile_carry                   # (t, r)
+
+    # destination of output slot (t, j): start of its run + in-run rank.
+    # On TPU this is r coalesced run copies per tile; XLA scatter here.
+    run_start = jnp.take_along_axis(base, sorted_digit, axis=1)
+    dest = run_start + rank
+    out = jnp.zeros((t * kpb,), keys.dtype).at[dest.reshape(-1)].set(
+        sorted_tiles.reshape(-1))
+    return out[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def kernel_local_sort(keys: jnp.ndarray, interpret: bool = True) -> jnp.ndarray:
+    """Local sort of (S, L) padded buckets via the bitonic kernel."""
+    return bitonic_sort_rows(keys, interpret=interpret)
+
+
+def tile_histogram_pass(keys: jnp.ndarray, shift: int, width: int,
+                        kpb: int = 8192, interpret: bool = True):
+    """Histogram step of a pass: (n,) keys -> ((T, r) tile hists, (r,) total)."""
+    n = keys.shape[0]
+    pad = (-n) % kpb
+    sentinel = ~jnp.zeros((), keys.dtype)
+    padded = jnp.concatenate([keys, jnp.full((pad,), sentinel, keys.dtype)])
+    hist = radix_histogram(padded.reshape(-1, kpb), shift, width,
+                           interpret=interpret)
+    total = hist.sum(axis=0)
+    if pad:
+        total = total.at[(1 << width) - 1].add(-pad)
+    return hist, total

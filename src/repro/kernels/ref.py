@@ -1,0 +1,60 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+Each function mirrors one kernel's contract exactly; tests sweep shapes and
+dtypes asserting allclose/array_equal between kernel (interpret mode) and ref.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def radix_histogram_ref(keys: jnp.ndarray, shift: int, width: int) -> jnp.ndarray:
+    """(T, KPB) uint keys -> (T, 2^width) int32 per-tile digit histograms."""
+    r = 1 << width
+    digit = ((keys >> jnp.array(shift, keys.dtype)) &
+             jnp.array(r - 1, keys.dtype)).astype(jnp.int32)
+
+    def row(d):
+        return jnp.zeros((r,), jnp.int32).at[d].add(1)
+
+    return jax.vmap(row)(digit)
+
+
+def tile_multisplit_ref(keys: jnp.ndarray, shift: int, width: int):
+    """(T, KPB) keys -> (keys digit-major within each tile, per-tile in-digit
+    rank of each *output* slot, per-tile histogram).
+
+    The within-tile permutation is the paper's shared-memory write combining
+    (Fig. 3): after it, every digit's keys are one contiguous run, so the HBM
+    write of a run is a single coalesced copy.
+    """
+    r = 1 << width
+    digit = ((keys >> jnp.array(shift, keys.dtype)) &
+             jnp.array(r - 1, keys.dtype)).astype(jnp.int32)
+
+    def row(krow, drow):
+        order = jnp.argsort(drow, stable=True)
+        return krow[order], drow[order]
+
+    sorted_keys, sorted_digit = jax.vmap(row)(keys, digit)
+    hist = radix_histogram_ref(keys, shift, width)
+    excl = jnp.cumsum(hist, axis=1) - hist
+    # rank of each output slot within its digit run
+    pos = jnp.arange(keys.shape[1], dtype=jnp.int32)[None, :]
+    rank = pos - jnp.take_along_axis(excl, sorted_digit, axis=1)
+    return sorted_keys, sorted_digit, rank, hist
+
+
+def bitonic_sort_rows_ref(keys: jnp.ndarray, values: jnp.ndarray | None = None):
+    """(S, L) -> rows sorted ascending; values permuted alongside."""
+    if values is None:
+        return jnp.sort(keys, axis=1)
+    order = jnp.argsort(keys, axis=1, stable=True)
+    return (jnp.take_along_axis(keys, order, axis=1),
+            jnp.take_along_axis(values, order, axis=1))
+
+
+def onehot_matmul_hist_ref(keys: jnp.ndarray, shift: int, width: int):
+    """Flat histogram over all tiles (what the atomics-only GPU kernel makes)."""
+    return radix_histogram_ref(keys, shift, width).sum(axis=0)

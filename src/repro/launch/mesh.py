@@ -1,0 +1,30 @@
+"""Production mesh definition (multi-pod dry-run contract).
+
+A FUNCTION, not a module constant: importing this module never touches jax
+device state, so smoke tests keep seeing the single real CPU device.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; (2, 16, 16) = 512 chips across two pods."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def data_axes(mesh) -> tuple:
+    """Axes that carry the batch dimension (pod composes with data)."""
+    names = mesh.axis_names
+    return ("pod", "data") if "pod" in names else ("data",)
+
+
+def data_shards(mesh) -> int:
+    import math
+    return math.prod(mesh.shape[a] for a in data_axes(mesh))
+
+
+def model_shards(mesh) -> int:
+    return mesh.shape["model"]

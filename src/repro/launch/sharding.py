@@ -1,0 +1,159 @@
+"""Name-based sharding rules: DP over (pod, data), TP/EP over model, FSDP
+storage sharding over data for the large architectures.
+
+Rules are *divisibility-guarded*: a dimension is sharded only when it divides
+the axis size (e.g. musicgen's 24 heads don't divide the 16-way model axis ->
+attention weights replicate, the FFN still shards).  Everything is expressed
+over axis NAMES, so the same rules re-apply on any mesh — the elasticity
+contract.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import data_axes
+
+
+def _div(n: int, mesh, axis) -> bool:
+    size = 1
+    for a in (axis if isinstance(axis, tuple) else (axis,)):
+        size *= mesh.shape[a]
+    return n % size == 0 and n > 0
+
+
+def param_spec(path: str, shape, cfg, mesh) -> P:
+    """PartitionSpec for one parameter leaf (path from tree_flatten_with_path).
+
+    Stacked layer params carry a leading L dim (never sharded).
+    """
+    dp = data_axes(mesh)
+    stacked = "layers" in path
+    dims = list(shape[1:] if stacked else shape)
+
+    def out(*spec):
+        spec = list(spec) + [None] * (len(dims) - len(spec))
+        return P(*( [None] + spec if stacked else spec ))
+
+    fsdp = cfg.fsdp_params
+
+    if "embed" in path or "lm_head" in path:
+        v_dim = 0 if "embed" in path else 1
+        if len(dims) < 2:                  # factored optimizer state (vr/vc)
+            return out()
+        if _div(dims[v_dim], mesh, "model"):
+            return out(*(("model", None) if v_dim == 0 else (None, "model")))
+        return out()
+
+    if "router" in path:
+        return out()
+    if "w_gate" in path or "w_up" in path or "w_down" in path:
+        if len(dims) == 3:                        # MoE experts (E, d, f)/(E, f, d)
+            spec = ["model" if _div(dims[0], mesh, "model") else None, None, None]
+            if fsdp and _div(dims[1], mesh, dp):
+                spec[1] = dp
+            return out(*spec)
+        if len(dims) != 2:                        # factored state
+            return out()
+        # dense FFN (d, f) / (f, d)
+        f_dim = 1 if "down" not in path else 0
+        spec = [None, None]
+        if _div(dims[f_dim], mesh, "model"):
+            spec[f_dim] = "model"
+        if fsdp and _div(dims[1 - f_dim], mesh, dp):
+            spec[1 - f_dim] = dp
+        return out(*spec)
+
+    if len(dims) < 2:                             # vectors / factored states
+        return out()
+    if any(k in path for k in ("wq", "wk", "wv")):
+        heads = cfg.n_heads_padded if "wq" in path else cfg.n_kv_padded
+        if heads and _div(heads, mesh, "model"):
+            return out(None, "model")
+        if fsdp and _div(dims[0], mesh, dp):
+            return out(dp, None)
+        return out()
+    if "wo" in path:
+        if cfg.n_heads and _div(cfg.n_heads_padded, mesh, "model"):
+            return out("model", None)
+        if fsdp and _div(dims[1], mesh, dp):
+            return out(None, dp)
+        return out()
+
+    if "in_proj" in path:                          # ssm (d, 2di+2n+h)
+        return out(None, "model") if _div(dims[1], mesh, "model") else out()
+    if "out_proj" in path:                         # ssm (di, d)
+        return out("model", None) if _div(dims[0], mesh, "model") else out()
+
+    return out()                                   # norms, scalars, conv, A/D
+
+
+def _spec_like(tree, cfg, mesh):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    specs = []
+    for path, leaf in flat:
+        pstr = jax.tree_util.keystr(path)
+        shp = jnp.shape(leaf)
+        spec = param_spec(pstr, shp, cfg, mesh)
+        if len(spec) > len(shp):                   # scalar/odd-rank state leaf
+            spec = P()
+        # rank/divisibility sanity: fall back to replication when mismatched
+        ok = len(spec) <= len(shp)
+        if ok:
+            for dim, ax in zip(shp, tuple(spec) + (None,) * len(shp)):
+                if ax is None:
+                    continue
+                if not _div(dim, mesh, ax if isinstance(ax, tuple) else ax):
+                    ok = False
+                    break
+        specs.append(spec if ok else P())
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def param_shardings(params_shape, cfg, mesh):
+    """NamedShardings for a params (or optimizer-state) pytree."""
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        _spec_like(params_shape, cfg, mesh))
+
+
+def batch_specs(cfg, mesh, shape_cfg) -> Any:
+    dp = data_axes(mesh)
+    b = shape_cfg.global_batch
+    tok = P(dp, None) if _div(b, mesh, dp) else P()
+    out = {"tokens": tok}
+    if cfg.frontend == "vision_patches":
+        out["patches"] = P(dp, None, None) if _div(b, mesh, dp) else P()
+    return out
+
+
+def cache_specs(cfg, mesh, batch: int, max_len: int):
+    """DecodeCache specs: batch over DP when divisible, else sequence; KV heads
+    over model when divisible, else sequence over model too (flash-decode
+    style partial-KV layout)."""
+    dp = data_axes(mesh)
+    b_ok = _div(batch, mesh, dp)
+    kv_ok = cfg.n_kv_heads and _div(cfg.n_kv_padded, mesh, "model")
+    kv_k = kv_v = ssm_state = ssm_conv = None
+    if cfg.has_attention:
+        bspec = dp if b_ok else None
+        hspec = "model" if kv_ok else None
+        # sequence picks up every axis not used by batch/heads (flash-decode
+        # partial-KV layout: each model shard holds a slice of history)
+        seq_axes = tuple(a for ok, axes in ((b_ok, dp), (kv_ok, ("model",)))
+                         if not ok for a in axes)
+        sspec = seq_axes if seq_axes and _div(max_len, mesh, seq_axes) else None
+        kv_k = kv_v = P(None, bspec, sspec, hspec, None)
+    if cfg.has_ssm:
+        h_ok = _div(cfg.ssm_heads, mesh, "model")
+        ssm_state = P(None, dp if b_ok else None, "model" if h_ok else None,
+                      None, None)
+        ssm_conv = P(None, dp if b_ok else None, None, None)
+    from repro.models import DecodeCache
+    return DecodeCache(kv_k, kv_v, ssm_state, ssm_conv, P())
+
+
+def to_shardings(spec_tree, mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree)

@@ -1,0 +1,52 @@
+"""Production training driver: ``python -m repro.launch.train --arch <id>``.
+
+On real hardware this launches the sharded train loop over the production
+mesh; on this CPU container it runs the same code path on whatever devices
+exist (use --smoke for the reduced config).  Demonstrates the full stack:
+config -> sharded params -> fault-tolerant trainer -> checkpoints.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, get_smoke_config
+from repro.data import SyntheticLMData
+from repro.train import Trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=None)
+    ap.add_argument("--global-batch", type=int, default=None)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="checkpoints")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced same-family config (CPU-sized)")
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    seq = args.seq_len or (128 if args.smoke else 4096)
+    gb = args.global_batch or (8 if args.smoke else 256)
+
+    data = SyntheticLMData(vocab=cfg.vocab, seq_len=seq, global_batch=gb,
+                           num_patches=cfg.num_patches
+                           if cfg.frontend == "vision_patches" else 0,
+                           d_model=cfg.d_model)
+    tr = Trainer(cfg, data, f"{args.ckpt_dir}/{cfg.name}",
+                 ckpt_every=args.ckpt_every, base_lr=args.lr,
+                 total_steps=args.steps)
+    state = tr.init_or_resume(jax.random.PRNGKey(0))
+    n = sum(x.size for x in jax.tree.leaves(state.params))
+    print(f"[train] {cfg.name}: {n/1e6:.1f}M params, seq={seq}, batch={gb}, "
+          f"devices={jax.device_count()}")
+    tr.run(state, args.steps)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+"""Model zoo: config-driven architectures for all assigned families."""
+from repro.models.transformer import (init_params, forward, loss_fn, prefill,
+                                      decode_step, init_cache, DecodeCache)
+
+__all__ = ["init_params", "forward", "loss_fn", "prefill", "decode_step",
+           "init_cache", "DecodeCache"]

@@ -1,0 +1,183 @@
+"""Mamba2 SSD (state-space duality) layer — chunked training + O(1) decode.
+
+Follows the SSD block decomposition of arXiv:2405.21060: within-chunk terms
+are attention-like masked contractions, cross-chunk terms propagate a
+(heads, head_dim, state) recurrence.  Heads are sharded over the model axis
+(d_inner / 16 per chip), which also bounds the (b, h, c, q, q) decay-mask
+intermediate per chip.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, rms_norm
+
+CONV_K = 4  # short depthwise causal conv window (mamba standard)
+
+
+class SSMCache(NamedTuple):
+    state: jnp.ndarray       # (B, H, P, N)
+    conv: jnp.ndarray        # (B, CONV_K - 1, conv_dim) last inputs
+
+
+def conv_dim(cfg) -> int:
+    return cfg.d_inner + 2 * cfg.ssm_state
+
+
+def init_ssm(key, cfg, dtype):
+    ks = jax.random.split(key, 6)
+    d, di, n, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    proj_out = 2 * di + 2 * n + h                 # z, x, B, C, dt
+    return {
+        "in_proj": dense_init(ks[0], d, proj_out, dtype),
+        "conv_w": (jax.random.normal(ks[1], (CONV_K, conv_dim(cfg)), jnp.float32)
+                   * 0.1).astype(dtype),
+        "A_log": jnp.zeros((h,), jnp.float32),            # A = -exp(A_log) = -1
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm_w": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[5], di, d, dtype),
+    }
+
+
+def _split_proj(proj, cfg):
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = proj[..., :di]
+    xbc = proj[..., di:2 * di + 2 * n]
+    dt = proj[..., 2 * di + 2 * n:]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, w):
+    """Depthwise causal conv over time. xbc: (B, S, C); w: (K, C)."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1], :] * w[i] for i in range(k))
+    return jax.nn.silu(out)
+
+
+def _segsum(x):
+    """(..., Q) -> (..., Q, Q) stable segment sums: out[i, j] = sum_{j<t<=i} x_t."""
+    q = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    seg = cs[..., :, None] - cs[..., None, :]
+    ii = jnp.arange(q)[:, None]
+    jj = jnp.arange(q)[None, :]
+    return jnp.where(jj <= ii, seg, -jnp.inf)
+
+
+def ssm_forward(params, x, cfg, return_cache: bool = False):
+    """Chunked SSD scan. x: (B, S, d) -> (B, S, d) (+ SSMCache for prefill).
+
+    Sequences not divisible by the chunk length are zero-padded at the tail;
+    causality keeps the padded positions from influencing real outputs.
+    """
+    s_orig = x.shape[1]
+    q = min(cfg.ssm_chunk, s_orig)
+    pad = (-s_orig) % q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+    b, s, d = x.shape
+    di, n, h, p = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    nc = s // q
+
+    proj = x @ params["in_proj"]
+    z, xbc, dt = _split_proj(proj, cfg)
+    xbc_raw = xbc                      # pre-conv inputs feed the decode cache
+    xbc = _causal_conv(xbc, params["conv_w"])
+    xin = xbc[..., :di].reshape(b, s, h, p)
+    bmat = xbc[..., di:di + n]                          # (B, S, N) single group
+    cmat = xbc[..., di + n:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,S,H)
+    a = -jnp.exp(params["A_log"])                       # (H,)
+    da = dt * a                                         # (B,S,H)
+
+    # chunk views
+    xin_c = xin.reshape(b, nc, q, h, p)
+    b_c = bmat.reshape(b, nc, q, n).astype(jnp.float32)
+    c_c = cmat.reshape(b, nc, q, n).astype(jnp.float32)
+    dt_c = dt.reshape(b, nc, q, h)
+    da_c = da.reshape(b, nc, q, h)
+    cum = jnp.cumsum(da_c, axis=2)                      # (B,NC,Q,H)
+
+    # ---- intra-chunk (attention-like) term ----
+    lmask = jnp.exp(_segsum(da_c.transpose(0, 1, 3, 2)))    # (B,NC,H,Q,Q)
+    scores = jnp.einsum("bcin,bcjn->bcij", c_c, b_c)        # (B,NC,Q,Q)
+    y_intra = jnp.einsum("bcij,bchij,bcjh,bcjhp->bcihp",
+                         scores, lmask, dt_c,
+                         xin_c.astype(jnp.float32))
+
+    # ---- chunk states + inter-chunk recurrence ----
+    decay_states = jnp.exp(cum[:, :, -1:, :] - cum)         # (B,NC,Q,H)
+    states = jnp.einsum("bcjn,bcjh,bcjhp->bchpn",
+                        b_c, dt_c * decay_states, xin_c.astype(jnp.float32))
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                 # (B,NC,H)
+
+    def scan_fn(prev, inp):
+        st, dec = inp
+        new = prev * dec[:, :, None, None] + st
+        return new, prev
+
+    init = jnp.zeros((b, h, p, n), jnp.float32)
+    final_state, prev_states = jax.lax.scan(
+        scan_fn, init, (states.transpose(1, 0, 2, 3, 4),
+                        chunk_decay.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)      # (B,NC,H,P,N)
+
+    y_inter = jnp.einsum("bcin,bchpn,bcih->bcihp",
+                         c_c, prev_states, jnp.exp(cum))
+    y = (y_intra + y_inter).reshape(b, s, h, p)
+    y = y + params["D"][None, None, :, None] * xin.astype(jnp.float32)
+    y = y.reshape(b, s, di).astype(x.dtype)
+
+    y = y * jax.nn.silu(z)
+    y = rms_norm(y, params["norm_w"].astype(x.dtype), cfg.rms_eps)
+    out = y @ params["out_proj"]
+    out = out[:, :s_orig] if pad else out
+    if not return_cache:
+        return out
+    # exact state handoff needs no tail padding (pad positions would apply
+    # spurious decay); prefill shapes are chunk-aligned by construction
+    assert pad == 0 and s_orig >= CONV_K - 1, "prefill must be chunk-aligned"
+    conv_tail = xbc_raw[:, s_orig - (CONV_K - 1): s_orig, :]
+    cache = SSMCache(state=final_state, conv=conv_tail)
+    return out, cache
+
+
+def ssm_decode_step(params, x, cache: SSMCache, cfg):
+    """One-token step. x: (B, 1, d); O(1) state update (no KV growth)."""
+    b, _, d = x.shape
+    di, n, h, p = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    proj = x[:, 0] @ params["in_proj"]
+    z, xbc, dt = _split_proj(proj, cfg)
+
+    conv_in = jnp.concatenate([cache.conv, xbc[:, None, :]], axis=1)  # (B,K,C)
+    w = params["conv_w"]
+    xbc = jax.nn.silu(jnp.einsum("bkc,kc->bc", conv_in, w))
+    new_conv = conv_in[:, 1:, :]
+
+    xin = xbc[..., :di].reshape(b, h, p)
+    bvec = xbc[..., di:di + n].astype(jnp.float32)
+    cvec = xbc[..., di + n:].astype(jnp.float32)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,H)
+    a = -jnp.exp(params["A_log"])
+    da = jnp.exp(dt * a)                                    # (B,H)
+
+    upd = jnp.einsum("bh,bhp,bn->bhpn", dt, xin.astype(jnp.float32), bvec)
+    state = cache.state * da[:, :, None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", state, cvec)
+    y = y + params["D"][None, :, None] * xin.astype(jnp.float32)
+    y = y.reshape(b, di).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = rms_norm(y, params["norm_w"].astype(x.dtype), cfg.rms_eps)
+    out = (y @ params["out_proj"])[:, None, :]
+    return out, SSMCache(state=state, conv=new_conv)
+
+
+def init_ssm_cache(cfg, batch: int, dtype):
+    h, p, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    return SSMCache(state=jnp.zeros((batch, h, p, n), jnp.float32),
+                    conv=jnp.zeros((batch, CONV_K - 1, conv_dim(cfg)), dtype))

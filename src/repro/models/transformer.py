@@ -1,0 +1,337 @@
+"""Config-driven model assembly for all assigned architecture families.
+
+Families:
+  dense  — pre-norm GQA + SwiGLU (internlm2, deepseek, phi4; musicgen over
+           EnCodec-token stub; internvl2 with patch-embedding stub frontend)
+  moe    — GQA + sort-dispatched MoE FFN (qwen3-moe, kimi-k2)
+  ssm    — Mamba2 SSD blocks, attention-free
+  hybrid — Hymba: parallel attention+SSM heads per block, SWA except listed
+           global layers, + SwiGLU FFN
+
+Layers are scan-stacked (params carry a leading L dim) so the HLO stays O(1)
+in depth — essential for the 95-layer deepseek-67b dry-run.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.ad_checkpoint import checkpoint_name
+
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models import ssm as SSM
+
+
+def _seq_shard(x, cfg):
+    """Sequence-parallel residual stream (Korthikanti et al.): the saved
+    per-layer carry is sharded over the model axis on the sequence dim, so
+    remat checkpoints cost 1/|model| of the replicated layout.  GSPMD inserts
+    the all-gather where a block needs the full sequence (attention/SSM)."""
+    if not cfg.seq_shard_activations or x.shape[1] % 2:
+        return x
+    return L.constrain(x, P(L.dp_axes(), "model", None))
+
+
+# ----------------------------- init -----------------------------------------
+
+def _init_block(key, cfg, dtype):
+    p: Dict[str, Any] = {}
+    ks = jax.random.split(key, 8)
+    d = cfg.d_model
+    if cfg.family in ("dense", "moe", "audio", "vlm"):
+        p["attn_norm"] = jnp.ones((d,), jnp.float32)
+        p["attn"] = L.init_attention(ks[0], cfg, dtype)
+        p["ffn_norm"] = jnp.ones((d,), jnp.float32)
+        if cfg.is_moe:
+            p["moe"] = MOE.init_moe(ks[1], cfg, dtype)
+        else:
+            p["mlp"] = L.init_mlp(ks[1], d, cfg.d_ff, dtype)
+    elif cfg.family == "ssm":
+        p["norm"] = jnp.ones((d,), jnp.float32)
+        p["ssm"] = SSM.init_ssm(ks[0], cfg, dtype)
+    elif cfg.family == "hybrid":
+        p["in_norm"] = jnp.ones((d,), jnp.float32)
+        p["attn"] = L.init_attention(ks[0], cfg, dtype)
+        p["ssm"] = SSM.init_ssm(ks[1], cfg, dtype)
+        p["b_attn"] = jnp.float32(0.5)
+        p["b_ssm"] = jnp.float32(0.5)
+        p["ffn_norm"] = jnp.ones((d,), jnp.float32)
+        p["mlp"] = L.init_mlp(ks[2], d, cfg.d_ff, dtype)
+    else:
+        raise ValueError(cfg.family)
+    return p
+
+
+def init_params(cfg, key):
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 4)
+    v, d = cfg.padded_vocab, cfg.d_model
+    params = {
+        "embed": (jax.random.normal(ks[0], (v, d), jnp.float32) * 0.02).astype(dtype),
+        "final_norm": jnp.ones((d,), jnp.float32),
+        "layers": jax.vmap(lambda k: _init_block(k, cfg, dtype))(
+            jax.random.split(ks[1], cfg.n_layers)),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.dense_init(ks[2], d, v, dtype)
+    return params
+
+
+def _windows(cfg) -> jnp.ndarray:
+    """Per-layer attention window (0 = full attention)."""
+    w = jnp.full((cfg.n_layers,), cfg.attn_window, jnp.int32)
+    if cfg.global_attn_layers:
+        w = w.at[jnp.asarray(cfg.global_attn_layers)].set(0)
+    return w
+
+
+# ----------------------------- forward --------------------------------------
+
+def _block_fwd(bp, x, cfg, window, positions):
+    aux = jnp.float32(0.0)
+    if cfg.family in ("dense", "moe", "audio", "vlm"):
+        h, _ = L.attention(bp["attn"], L.rms_norm(x, bp["attn_norm"], cfg.rms_eps),
+                           cfg, positions=positions, window=window)
+        x = x + checkpoint_name(h, "attn_out")
+        y = L.rms_norm(x, bp["ffn_norm"], cfg.rms_eps)
+        if cfg.is_moe:
+            m, aux = MOE.moe_layer(bp["moe"], y, cfg, groups=cfg_groups(cfg))
+            x = x + checkpoint_name(m, "ffn_out")
+        else:
+            x = x + checkpoint_name(L.mlp(bp["mlp"], y), "ffn_out")
+    elif cfg.family == "ssm":
+        h = SSM.ssm_forward(bp["ssm"], L.rms_norm(x, bp["norm"], cfg.rms_eps), cfg)
+        x = x + checkpoint_name(h, "ffn_out")
+    elif cfg.family == "hybrid":
+        y = L.rms_norm(x, bp["in_norm"], cfg.rms_eps)
+        a, _ = L.attention(bp["attn"], y, cfg, positions=positions, window=window)
+        s = SSM.ssm_forward(bp["ssm"], y, cfg)
+        x = x + checkpoint_name((bp["b_attn"] * a.astype(jnp.float32)
+                 + bp["b_ssm"] * s.astype(jnp.float32)).astype(x.dtype), "attn_out")
+        x = x + checkpoint_name(
+            L.mlp(bp["mlp"], L.rms_norm(x, bp["ffn_norm"], cfg.rms_eps)), "ffn_out")
+    return _seq_shard(x, cfg), aux
+
+
+def cfg_groups(cfg) -> int:
+    return cfg.dispatch_groups
+
+
+def _embed_inputs(params, cfg, batch):
+    """batch: {"tokens": (B,S)} (+ "patches": (B,P,d) for vlm)."""
+    tokens = batch["tokens"]
+    x = params["embed"][tokens]
+    if cfg.frontend == "vision_patches":
+        patches = batch["patches"].astype(x.dtype)       # precomputed stub
+        x = jnp.concatenate([patches, x], axis=1)
+    return x
+
+
+def forward(params, cfg, batch, *, remat: bool = False):
+    """Full-sequence forward -> logits (B, S_total, V)."""
+    x = _embed_inputs(params, cfg, batch)
+    b, s, d = x.shape
+    positions = jnp.arange(s, dtype=jnp.int32)[None, :]
+    windows = _windows(cfg)
+
+    def body(carry, xs):
+        bp, w = xs
+        y, aux = _block_fwd(bp, carry[0], cfg, w, positions)
+        return (y, carry[1] + aux), None
+
+    if remat and cfg.remat_policy == "save_block_io":
+        body_fn = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.save_only_these_names(
+                "attn_out", "ffn_out"))
+    elif remat:
+        body_fn = jax.checkpoint(body)
+    else:
+        body_fn = body
+    (x, aux), _ = jax.lax.scan(body_fn, (x, jnp.float32(0.0)),
+                               (params["layers"], windows),
+                               unroll=cfg.n_layers if cfg.scan_unroll else 1)
+    x = L.rms_norm(x, params["final_norm"], cfg.rms_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head
+    return logits, aux
+
+
+def loss_fn(params, cfg, batch, *, remat: bool = True):
+    """Next-token cross-entropy; for vlm the patch positions are excluded.
+
+    The vocab axis of the logits is model-sharded; the CE uses only masked
+    reductions over it (max / sum / one-hot contraction), never a gather —
+    a gather would force GSPMD to all-gather the (B, S, V) logits.
+    """
+    logits, aux = forward(params, cfg, batch, remat=remat)
+    tokens = batch["tokens"]
+    n_prefix = logits.shape[1] - tokens.shape[1]           # vlm patch positions
+    logits = logits[:, n_prefix:, :][:, :-1, :]
+    targets = tokens[:, 1:]
+    lf = logits.astype(jnp.float32)
+    m = jax.lax.stop_gradient(lf.max(axis=-1, keepdims=True))
+    logz = jnp.log(jnp.sum(jnp.exp(lf - m), axis=-1)) + m[..., 0]
+    iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 2)
+    gold = jnp.sum(jnp.where(iota == targets[..., None], lf, 0.0), axis=-1)
+    ce = jnp.mean(logz - gold)
+    return ce + 0.01 * aux / cfg.n_layers, {"ce": ce, "aux": aux}
+
+
+# ----------------------------- prefill --------------------------------------
+
+def _block_prefill(bp, x, cfg, window, positions):
+    """Like _block_fwd but collects the per-layer decode cache."""
+    kv = ssm_c = None
+    if cfg.family in ("dense", "moe", "audio", "vlm"):
+        h, kv = L.attention(bp["attn"], L.rms_norm(x, bp["attn_norm"], cfg.rms_eps),
+                            cfg, positions=positions, window=window)
+        x = x + h
+        y = L.rms_norm(x, bp["ffn_norm"], cfg.rms_eps)
+        if cfg.is_moe:
+            m, _ = MOE.moe_layer(bp["moe"], y, cfg, groups=cfg_groups(cfg))
+            x = x + m
+        else:
+            x = x + L.mlp(bp["mlp"], y)
+    elif cfg.family == "ssm":
+        h, ssm_c = SSM.ssm_forward(bp["ssm"], L.rms_norm(x, bp["norm"], cfg.rms_eps),
+                                   cfg, return_cache=True)
+        x = x + h
+    elif cfg.family == "hybrid":
+        y = L.rms_norm(x, bp["in_norm"], cfg.rms_eps)
+        a, kv = L.attention(bp["attn"], y, cfg, positions=positions, window=window)
+        s, ssm_c = SSM.ssm_forward(bp["ssm"], y, cfg, return_cache=True)
+        x = x + (bp["b_attn"] * a.astype(jnp.float32)
+                 + bp["b_ssm"] * s.astype(jnp.float32)).astype(x.dtype)
+        x = x + L.mlp(bp["mlp"], L.rms_norm(x, bp["ffn_norm"], cfg.rms_eps))
+    return _seq_shard(x, cfg), kv, ssm_c
+
+
+def prefill(params, cfg, batch, *, max_len: int = 0, remat: bool = True):
+    """Process the prompt; return (last-token logits (B,1,V), DecodeCache).
+
+    ``max_len`` reserves cache slots beyond the prompt (0 = exactly prompt).
+    """
+    x = _embed_inputs(params, cfg, batch)
+    b, s, d = x.shape
+    positions = jnp.arange(s, dtype=jnp.int32)[None, :]
+    windows = _windows(cfg)
+    max_len = max(max_len, s)
+
+    def body(carry, xs):
+        bp, w = xs
+        y, kv, ssm_c = _block_prefill(bp, carry, cfg, w, positions)
+        return y, (kv, ssm_c)
+
+    body_fn = jax.checkpoint(body) if remat else body
+    x, (kvs, ssm_cs) = jax.lax.scan(body_fn, x, (params["layers"], windows),
+                                    unroll=cfg.n_layers if cfg.scan_unroll else 1)
+    x = L.rms_norm(x[:, -1:, :], params["final_norm"], cfg.rms_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head
+
+    kv_k = kv_v = ssm_state = ssm_conv = None
+    if cfg.has_attention:
+        pad = max_len - s
+        kv_k = jnp.pad(kvs[0], ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_v = jnp.pad(kvs[1], ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    if cfg.has_ssm:
+        ssm_state, ssm_conv = ssm_cs.state, ssm_cs.conv
+    cache = DecodeCache(kv_k, kv_v, ssm_state, ssm_conv, jnp.int32(s))
+    return logits, cache
+
+
+# ----------------------------- decode ---------------------------------------
+
+class DecodeCache(NamedTuple):
+    kv_k: Optional[jnp.ndarray]       # (L, B, T, KV, hd)
+    kv_v: Optional[jnp.ndarray]
+    ssm_state: Optional[jnp.ndarray]  # (L, B, H, P, N)
+    ssm_conv: Optional[jnp.ndarray]   # (L, B, K-1, conv_dim)
+    length: jnp.ndarray               # () int32 — tokens already in cache
+
+
+def init_cache(cfg, batch: int, max_len: int, dtype=None) -> DecodeCache:
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    l = cfg.n_layers
+    kv_k = kv_v = ssm_state = ssm_conv = None
+    if cfg.has_attention:
+        shp = (l, batch, max_len, cfg.n_kv_padded, cfg.head_dim)
+        kv_k = jnp.zeros(shp, dtype)
+        kv_v = jnp.zeros(shp, dtype)
+    if cfg.has_ssm:
+        ssm_state = jnp.zeros((l, batch, cfg.ssm_heads, cfg.ssm_head_dim,
+                               cfg.ssm_state), jnp.float32)
+        ssm_conv = jnp.zeros((l, batch, SSM.CONV_K - 1, SSM.conv_dim(cfg)), dtype)
+    return DecodeCache(kv_k, kv_v, ssm_state, ssm_conv, jnp.int32(0))
+
+
+def _block_decode(bp, x, cfg, window, cache_sl, length):
+    """One layer, one token. cache_sl: per-layer cache slices."""
+    kv_k, kv_v, s_state, s_conv = cache_sl
+    positions = jnp.full((x.shape[0], 1), length, jnp.int32)
+    if cfg.family in ("dense", "moe", "audio", "vlm"):
+        h, (nk, nv) = L.attention(bp["attn"],
+                                  L.rms_norm(x, bp["attn_norm"], cfg.rms_eps),
+                                  cfg, positions=positions,
+                                  kv_cache=(kv_k, kv_v), cache_len=length,
+                                  window=window)
+        x = x + h
+        y = L.rms_norm(x, bp["ffn_norm"], cfg.rms_eps)
+        if cfg.is_moe:
+            m, _ = MOE.moe_layer(bp["moe"], y, cfg, groups=cfg_groups(cfg))
+            x = x + m
+        else:
+            x = x + L.mlp(bp["mlp"], y)
+        return x, (nk, nv, s_state, s_conv)
+    if cfg.family == "ssm":
+        h, nc = SSM.ssm_decode_step(bp["ssm"],
+                                    L.rms_norm(x, bp["norm"], cfg.rms_eps),
+                                    SSM.SSMCache(s_state, s_conv), cfg)
+        return x + h, (kv_k, kv_v, nc.state, nc.conv)
+    if cfg.family == "hybrid":
+        y = L.rms_norm(x, bp["in_norm"], cfg.rms_eps)
+        a, (nk, nv) = L.attention(bp["attn"], y, cfg, positions=positions,
+                                  kv_cache=(kv_k, kv_v), cache_len=length,
+                                  window=window)
+        s, nc = SSM.ssm_decode_step(bp["ssm"], y, SSM.SSMCache(s_state, s_conv), cfg)
+        x = x + (bp["b_attn"] * a.astype(jnp.float32)
+                 + bp["b_ssm"] * s.astype(jnp.float32)).astype(x.dtype)
+        x = x + L.mlp(bp["mlp"], L.rms_norm(x, bp["ffn_norm"], cfg.rms_eps))
+        return x, (nk, nv, nc.state, nc.conv)
+    raise ValueError(cfg.family)
+
+
+def decode_step(params, cfg, token, cache: DecodeCache):
+    """token: (B, 1) int32 -> (logits (B, 1, V), updated cache)."""
+    x = params["embed"][token]
+    windows = _windows(cfg)
+    dummy = jnp.zeros((cfg.n_layers, 0), jnp.int8)   # uniform scan xs stand-in
+
+    def body(carry, xs):
+        bp, w, ck, cv, ss, sc = xs
+        y, new_sl = _block_decode(bp, carry, cfg, w,
+                                  (ck, cv, ss, sc), cache.length)
+        return y, new_sl
+
+    xs = (params["layers"], windows,
+          cache.kv_k if cache.kv_k is not None else dummy,
+          cache.kv_v if cache.kv_v is not None else dummy,
+          cache.ssm_state if cache.ssm_state is not None else dummy,
+          cache.ssm_conv if cache.ssm_conv is not None else dummy)
+    x, new_caches = jax.lax.scan(body, x, xs,
+                                 unroll=cfg.n_layers if cfg.scan_unroll else 1)
+    nk, nv, ns, nc = new_caches
+    x = L.rms_norm(x, params["final_norm"], cfg.rms_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head
+    new = DecodeCache(
+        kv_k=nk if cache.kv_k is not None else None,
+        kv_v=nv if cache.kv_v is not None else None,
+        ssm_state=ns if cache.ssm_state is not None else None,
+        ssm_conv=nc if cache.ssm_conv is not None else None,
+        length=cache.length + 1)
+    return logits, new

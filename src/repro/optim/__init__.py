@@ -1,0 +1,7 @@
+from repro.optim.optimizers import (adamw, adafactor, adamw8bit, get_optimizer,
+                                    clip_by_global_norm, cosine_schedule)
+from repro.optim.compression import int8_compress, int8_decompress
+
+__all__ = ["adamw", "adafactor", "adamw8bit", "get_optimizer",
+           "clip_by_global_norm", "cosine_schedule",
+           "int8_compress", "int8_decompress"]

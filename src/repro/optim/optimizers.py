@@ -1,0 +1,191 @@
+"""Optimizers built from scratch (no optax): AdamW, Adafactor, 8-bit AdamW.
+
+The three tiers trade per-parameter state bytes for fidelity — the knob that
+decides whether a 1T-parameter model fits a 16 GB/chip pod:
+
+  adamw      m,v fp32            + 8 B/param   (default, <= ~70B params)
+  adamw8bit  m,v int8 + scales   + ~2 B/param  (block-quantised states)
+  adafactor  v factored row/col  + ~0 B/param  (kimi-k2 tier)
+
+API (optax-like): ``opt.init(params) -> state``; ``opt.update(grads, state,
+params, lr) -> (new_params, new_state)``.  All updates are donation-friendly
+(pure pytree maps, no aliasing surprises).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[..., Any]   # (grads, state, params, lr) -> (params, state)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    """Global-norm clip without materialising an f32 copy of the gradients:
+    the norm accumulates in f32 scalars; the rescale happens in each leaf's
+    own dtype (a 1T-param model saves ~16 GiB/chip of transient f32)."""
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), gn
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = 0.5 * base_lr * (1.0 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+# --------------------------------- AdamW ------------------------------------
+
+def adamw(b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1):
+    def init(params):
+        zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        c = state["count"] + 1
+        bc1 = 1 - b1 ** c.astype(jnp.float32)
+        bc2 = 1 - b2 ** c.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * jnp.square(g)
+            step = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            step = step + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * step).astype(p.dtype), m, v
+
+        out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+        new_p = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, {"m": new_m, "v": new_v, "count": c}
+
+    return Optimizer(init, update)
+
+
+# ------------------------------- Adafactor ----------------------------------
+
+def adafactor(eps=1e-30, clip_threshold=1.0, decay=0.8, weight_decay=0.0):
+    """Factored second moments: O(rows+cols) state for matrices — the memory
+    tier that lets kimi-k2 (1T params) train on a 16 GB/chip pod."""
+    def _factored(shape):
+        return len(shape) >= 2
+
+    def init(params):
+        def st(p):
+            if _factored(p.shape):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return {"v": jnp.zeros_like(p, dtype=jnp.float32)}
+        return {"s": jax.tree.map(st, params,
+                                  is_leaf=lambda x: isinstance(x, jnp.ndarray)),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        c = state["count"] + 1
+        beta = 1.0 - (c.astype(jnp.float32) + 1.0) ** (-decay)
+
+        def upd(g, s, p):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + eps
+            if _factored(p.shape):
+                vr = beta * s["vr"] + (1 - beta) * g2.mean(axis=-1)
+                vc = beta * s["vc"] + (1 - beta) * g2.mean(axis=-2)
+                denom = vr.mean(axis=-1, keepdims=True)
+                # factored rsqrt: u = g * rsqrt(vr/denom) * rsqrt(vc) — never
+                # materialises the dense (rows x cols) f32 vhat (the 1T-param
+                # memory spike the §Perf log chases)
+                rs_r = jax.lax.rsqrt(jnp.maximum(vr / jnp.maximum(denom, eps), eps))
+                rs_c = jax.lax.rsqrt(jnp.maximum(vc, eps))
+                u = g * rs_r[..., None] * rs_c[..., None, :]
+                ns = {"vr": vr, "vc": vc}
+            else:
+                vhat = beta * s["v"] + (1 - beta) * g2
+                u = g * jax.lax.rsqrt(jnp.maximum(vhat, eps))
+                ns = {"v": vhat}
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-12)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            u = u + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype), ns
+
+        out = jax.tree.map(upd, grads, state["s"], params,
+                           is_leaf=lambda x: isinstance(x, dict) and
+                           ("v" in x or "vr" in x))
+        is_pair = lambda x: isinstance(x, tuple)
+        new_p = jax.tree.map(lambda o: o[0], out, is_leaf=is_pair)
+        new_s = jax.tree.map(lambda o: o[1], out, is_leaf=is_pair)
+        return new_p, {"s": new_s, "count": c}
+
+    return Optimizer(init, update)
+
+
+# ------------------------------- 8-bit AdamW --------------------------------
+
+_BLOCK = 256
+
+
+def _quant(x):
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % _BLOCK
+    fb = jnp.pad(flat, (0, pad)).reshape(-1, _BLOCK)
+    scale = jnp.max(jnp.abs(fb), axis=1, keepdims=True) / 127.0
+    q = jnp.round(fb / jnp.maximum(scale, 1e-12)).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def _dequant(q, scale, shape):
+    import math
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    return flat[: math.prod(shape)].reshape(shape)
+
+
+def adamw8bit(b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1):
+    """AdamW with block-quantised int8 m/v states (~2 B/param instead of 8)."""
+    def init(params):
+        def st(p):
+            q, s = _quant(jnp.zeros_like(p, dtype=jnp.float32))
+            return {"mq": q, "ms": s, "vq": q, "vs": s}
+        return {"s": jax.tree.map(st, params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        c = state["count"] + 1
+        bc1 = 1 - b1 ** c.astype(jnp.float32)
+        bc2 = 1 - b2 ** c.astype(jnp.float32)
+
+        def upd(g, s, p):
+            g = g.astype(jnp.float32)
+            m = b1 * _dequant(s["mq"], s["ms"], p.shape) + (1 - b1) * g
+            v = b2 * _dequant(s["vq"], s["vs"], p.shape) + (1 - b2) * jnp.square(g)
+            step = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            step = step + weight_decay * p.astype(jnp.float32)
+            mq, ms = _quant(m)
+            vq, vs = _quant(v)
+            return ((p.astype(jnp.float32) - lr * step).astype(p.dtype),
+                    {"mq": mq, "ms": ms, "vq": vq, "vs": vs})
+
+        out = jax.tree.map(upd, grads, state["s"], params,
+                           is_leaf=lambda x: isinstance(x, dict) and "mq" in x)
+        is_pair = lambda x: isinstance(x, tuple)
+        new_p = jax.tree.map(lambda o: o[0], out, is_leaf=is_pair)
+        new_s = jax.tree.map(lambda o: o[1], out, is_leaf=is_pair)
+        return new_p, {"s": new_s, "count": c}
+
+    return Optimizer(init, update)
+
+
+def get_optimizer(name: str, **kw) -> Optimizer:
+    return {"adamw": adamw, "adafactor": adafactor, "adamw8bit": adamw8bit}[name](**kw)

@@ -1,0 +1,123 @@
+"""Fault-tolerant training loop.
+
+Large-scale posture (what survives a node failure at 1000+ nodes):
+  * restart-exact data (batch = f(seed, step) — nothing to persist),
+  * async checkpoints every N steps with atomic publish + hash verification,
+  * resume = restore(latest) and continue at step+1 — tested by killing the
+    loop mid-run (tests/test_train_loop.py),
+  * synchronous SPMD steps: straggler mitigation comes from deterministic,
+    balanced work assignment (no parameter-server tail) and, at the input
+    layer, from sort-based length bucketing; preemption handling is
+    checkpoint/restart,
+  * elastic scaling: shardings are expressed over mesh *axis names*; on
+    restart with a different device count the same rules re-apply (the mesh
+    is rebuilt from the live device set).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Optional, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import loss_fn
+from repro.optim import get_optimizer, clip_by_global_norm, cosine_schedule
+from repro.checkpoint import AsyncCheckpointer, latest_step, restore_checkpoint
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt_state: Any
+    step: jnp.ndarray
+
+
+def make_train_step(cfg, optimizer_name: Optional[str] = None,
+                    base_lr: float = 3e-4, warmup: int = 100,
+                    total_steps: int = 10_000, max_grad_norm: float = 1.0,
+                    donate: bool = True, microbatches: int = 1):
+    """Build the jitted train step: grad(loss) -> clip -> schedule -> update.
+
+    ``microbatches > 1`` splits the batch along its leading axis and
+    accumulates gradients with a lax.scan — peak activation memory drops by
+    the microbatch factor while the math stays identical (mean of per-slice
+    gradients == full-batch gradient for a mean loss; asserted in tests).
+    """
+    opt = get_optimizer(optimizer_name or cfg.optimizer)
+    lr_fn = cosine_schedule(base_lr, warmup, total_steps)
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(
+            lambda p: loss_fn(p, cfg, batch, remat=cfg.remat), has_aux=True
+        )(params)
+
+    def step_fn(state: TrainState, batch: Dict[str, jnp.ndarray]):
+        if microbatches > 1:
+            sliced = jax.tree.map(
+                lambda x: x.reshape((microbatches, x.shape[0] // microbatches)
+                                    + x.shape[1:]), batch)
+
+            def acc_fn(carry, mb):
+                (loss_a, grads_a) = carry
+                (loss, metrics), grads = grads_of(state.params, mb)
+                return (loss_a + loss / microbatches,
+                        jax.tree.map(lambda a, g: a + g / microbatches,
+                                     grads_a, grads)), metrics
+
+            zeros = jax.tree.map(jnp.zeros_like, state.params)
+            (loss, grads), mstack = jax.lax.scan(
+                acc_fn, (jnp.float32(0.0), zeros), sliced)
+            metrics = jax.tree.map(lambda m: m[-1], mstack)
+        else:
+            (loss, metrics), grads = grads_of(state.params, batch)
+        grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+        lr = lr_fn(state.step)
+        new_params, new_opt = opt.update(grads, state.opt_state, state.params, lr)
+        out = TrainState(new_params, new_opt, state.step + 1)
+        return out, {"loss": loss, "grad_norm": gnorm, "lr": lr, **metrics}
+
+    return opt, (jax.jit(step_fn, donate_argnums=(0,)) if donate
+                 else jax.jit(step_fn))
+
+
+@dataclasses.dataclass
+class Trainer:
+    cfg: Any
+    data: Any                              # .batch(step) -> dict
+    ckpt_dir: str
+    ckpt_every: int = 50
+    log_every: int = 10
+    base_lr: float = 3e-4
+    total_steps: int = 1000
+
+    def init_or_resume(self, key) -> TrainState:
+        from repro.models import init_params
+        params = init_params(self.cfg, key)
+        opt, self._step_fn = make_train_step(
+            self.cfg, base_lr=self.base_lr, total_steps=self.total_steps)
+        state = TrainState(params, opt.init(params), jnp.int32(0))
+        last = latest_step(self.ckpt_dir)
+        if last is not None:
+            state = restore_checkpoint(self.ckpt_dir, last, state)
+            print(f"[trainer] resumed from step {last}")
+        self._ckpt = AsyncCheckpointer(self.ckpt_dir)
+        return state
+
+    def run(self, state: TrainState, num_steps: int,
+            on_step: Optional[Callable] = None) -> TrainState:
+        t0 = time.time()
+        start = int(state.step)
+        for s in range(start, start + num_steps):
+            batch = self.data.batch(s)
+            state, metrics = self._step_fn(state, batch)
+            if on_step is not None:
+                on_step(s, state, metrics)
+            if (s + 1) % self.log_every == 0:
+                dt = (time.time() - t0) / (s - start + 1)
+                print(f"[trainer] step {s+1} loss={float(metrics['loss']):.4f} "
+                      f"gnorm={float(metrics['grad_norm']):.3f} {dt*1e3:.0f} ms/step")
+            if (s + 1) % self.ckpt_every == 0:
+                self._ckpt.save(s + 1, state)
+        self._ckpt.wait()
+        return state

@@ -1,0 +1,5 @@
+from repro.utils.hlo import collective_bytes, collective_counts
+from repro.utils.roofline import Roofline, model_flops, PEAK_FLOPS, HBM_BW, ICI_BW
+
+__all__ = ["collective_bytes", "collective_counts", "Roofline", "model_flops",
+           "PEAK_FLOPS", "HBM_BW", "ICI_BW"]

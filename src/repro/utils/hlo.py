@@ -1,0 +1,92 @@
+"""HLO-text analysis: collective bytes-on-wire for the roofline's third term.
+
+``cost_analysis()`` reports FLOPs and HBM bytes but not collective traffic,
+so we parse the partitioned HLO and sum the bytes every collective moves
+across ICI, weighted by the op's wire factor:
+
+  all-gather          out * (P-1)/P     (each chip receives P-1 shards)
+  reduce-scatter      in  * (P-1)/P
+  all-reduce          2 * size * (P-1)/P  (ring = RS + AG)
+  all-to-all          size * (P-1)/P
+  collective-permute  size              (one hop)
+
+Shapes in the SPMD module are per-device, so the sums are per-chip wire bytes.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*(\([^)]*\)|\S+)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_V2_RE.search(line)
+    if m:                                   # [num_groups, group_size]
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip() != ""])
+    return default
+
+
+def collective_bytes(hlo_text: str, num_devices: int) -> Dict[str, float]:
+    """Per-chip wire bytes by collective kind (+ 'total')."""
+    out: Dict[str, float] = defaultdict(float)
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        shape_str, kind = m.group(1), m.group(2)
+        size = _shape_bytes(shape_str)
+        p = max(_group_size(line, num_devices), 1)
+        frac = (p - 1) / p
+        if kind == "all-reduce":
+            wire = 2 * size * frac
+        elif kind == "all-gather":
+            wire = size * frac
+        elif kind == "reduce-scatter":
+            wire = size * p * frac          # shape is the scattered output
+        elif kind == "all-to-all":
+            wire = size * frac
+        else:                                # collective-permute
+            wire = size
+        out[kind] += wire
+        out["total"] += wire
+    return dict(out)
+
+
+def collective_counts(hlo_text: str) -> Dict[str, int]:
+    out: Dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if m:
+            out[m.group(2)] += 1
+    return dict(out)

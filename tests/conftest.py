@@ -1,0 +1,19 @@
+"""Shared test fixtures. NOTE: no XLA_FLAGS here — smoke tests and benches
+must see the single real CPU device; multi-device tests spawn subprocesses."""
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def entropy_keys(rng, n, ands, dtype=np.uint32):
+    """Thearling & Smith entropy-reduction benchmark (paper §6): AND together
+    1 + ands uniform draws; ands=0 -> uniform, more ANDs -> lower entropy."""
+    info = np.iinfo(dtype)
+    x = rng.integers(0, info.max, n, dtype=dtype, endpoint=True)
+    for _ in range(ands):
+        x &= rng.integers(0, info.max, n, dtype=dtype, endpoint=True)
+    return x

@@ -1,0 +1,86 @@
+"""Per-architecture smoke tests (deliverable f): reduced same-family config,
+one forward/train step + one decode step on CPU; asserts shapes and no NaNs."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS, get_config, get_smoke_config, shapes_for
+from repro.models import init_params, loss_fn, decode_step, init_cache
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_train_step(arch):
+    cfg = get_smoke_config(arch)
+    params = init_params(cfg, KEY)
+    b, s = 2, 32
+    batch = {"tokens": jax.random.randint(KEY, (b, s), 0, cfg.vocab)}
+    if cfg.frontend == "vision_patches":
+        batch["patches"] = jax.random.normal(KEY, (b, cfg.num_patches, cfg.d_model))
+
+    loss, metrics = jax.jit(lambda p, bt: loss_fn(p, cfg, bt))(params, batch)
+    assert np.isfinite(float(loss)), arch
+    grads = jax.grad(lambda p: loss_fn(p, cfg, batch)[0])(params)
+    flat = jax.tree.leaves(grads)
+    assert all(np.isfinite(np.asarray(g)).all() for g in flat), arch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_decode_step(arch):
+    cfg = get_smoke_config(arch)
+    params = init_params(cfg, KEY)
+    b = 2
+    cache = init_cache(cfg, b, 16)
+    tok = jax.random.randint(KEY, (b, 1), 0, cfg.vocab)
+    logits, cache = jax.jit(lambda p, t, c: decode_step(p, cfg, t, c))(
+        params, tok, cache)
+    assert logits.shape == (b, 1, cfg.padded_vocab)
+    assert np.isfinite(np.asarray(logits)).all(), arch
+    assert int(cache.length) == 1
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_is_exact(arch):
+    """The full (dry-run-only) configs carry the exact published numbers."""
+    cfg = get_config(arch)
+    spec = {
+        "qwen3_moe_30b_a3b": (48, 2048, 32, 4, 768, 151936, 128, 8),
+        "kimi_k2_1t_a32b": (61, 7168, 64, 8, 2048, 163840, 384, 8),
+        "musicgen_medium": (48, 1536, 24, 24, 6144, 2048, 0, 0),
+        "internlm2_1_8b": (24, 2048, 16, 8, 8192, 92544, 0, 0),
+        "deepseek_67b": (95, 8192, 64, 8, 22016, 102400, 0, 0),
+        "phi4_mini_3_8b": (32, 3072, 24, 8, 8192, 200064, 0, 0),
+        "deepseek_7b": (30, 4096, 32, 32, 11008, 102400, 0, 0),
+        "hymba_1_5b": (32, 1600, 25, 5, 5504, 32001, 0, 0),
+        "mamba2_1_3b": (48, 2048, 0, 0, 0, 50280, 0, 0),
+        "internvl2_26b": (48, 6144, 48, 8, 16384, 92553, 0, 0),
+    }[arch]
+    got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_ff,
+           cfg.vocab, cfg.num_experts, cfg.top_k)
+    assert got == spec
+    if arch == "mamba2_1_3b":
+        assert cfg.ssm_state == 128
+    if arch == "hymba_1_5b":
+        assert cfg.ssm_state == 16 and cfg.supports_long_context
+    # long_500k applies only to sub-quadratic archs
+    names = [s.name for s in shapes_for(cfg)]
+    if arch in ("mamba2_1_3b", "hymba_1_5b"):
+        assert "long_500k" in names
+    else:
+        assert "long_500k" not in names
+
+
+def test_param_counts_roughly_match_billing():
+    """Sanity: config param math lands near the advertised model sizes."""
+    expect = {"kimi_k2_1t_a32b": (0.9e12, 1.2e12),
+              "deepseek_67b": (60e9, 72e9),
+              "deepseek_7b": (6e9, 8e9),
+              "qwen3_moe_30b_a3b": (28e9, 33e9),
+              "mamba2_1_3b": (1.1e9, 1.6e9),
+              "phi4_mini_3_8b": (3.4e9, 4.6e9),
+              "internlm2_1_8b": (1.6e9, 2.2e9)}
+    for arch, (lo, hi) in expect.items():
+        n = get_config(arch).param_count()
+        assert lo < n < hi, (arch, n)

@@ -1,0 +1,222 @@
+"""Substrate tests: optimizers, data determinism, checkpoint integrity,
+train-loop resume (simulated failure), serving engine."""
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import init_params
+from repro.optim import (adamw, adafactor, adamw8bit, clip_by_global_norm,
+                         cosine_schedule, int8_compress, int8_decompress)
+from repro.data import SyntheticLMData, length_bucketed_batches
+from repro.checkpoint import (save_checkpoint, restore_checkpoint, latest_step,
+                              AsyncCheckpointer)
+from repro.train import Trainer, TrainState, make_train_step
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ------------------------------ optimizers ----------------------------------
+
+def _toy():
+    params = {"w": jnp.ones((8, 16)), "b": jnp.zeros((16,))}
+    grads = {"w": jnp.full((8, 16), 0.5), "b": jnp.full((16,), -0.25)}
+    return params, grads
+
+
+@pytest.mark.parametrize("maker", [adamw, adafactor, adamw8bit])
+def test_optimizers_descend(maker):
+    params, grads = _toy()
+    opt = maker()
+    state = opt.init(params)
+    p1, state = opt.update(grads, state, params, 1e-2)
+    # step moves opposite the gradient
+    assert float(jnp.mean(p1["w"])) < float(jnp.mean(params["w"]))
+    assert float(jnp.mean(p1["b"])) > float(jnp.mean(params["b"]))
+    p2, state = opt.update(grads, state, p1, 1e-2)
+    assert all(np.isfinite(np.asarray(x)).all() for x in jax.tree.leaves(p2))
+
+
+def test_adam8bit_tracks_adamw():
+    params, grads = _toy()
+    oa, ob = adamw(weight_decay=0.0), adamw8bit(weight_decay=0.0)
+    sa, sb = oa.init(params), ob.init(params)
+    pa, pb = params, params
+    for _ in range(5):
+        pa, sa = oa.update(grads, sa, pa, 1e-2)
+        pb, sb = ob.update(grads, sb, pb, 1e-2)
+    err = max(float(jnp.max(jnp.abs(x - y)))
+              for x, y in zip(jax.tree.leaves(pa), jax.tree.leaves(pb)))
+    assert err < 5e-3, err
+
+
+def test_adafactor_state_is_small():
+    params = {"w": jnp.ones((256, 512))}
+    st = adafactor().init(params)
+    state_elems = sum(x.size for x in jax.tree.leaves(st["s"]))
+    assert state_elems <= 256 + 512          # factored, not dense
+
+
+def test_clip_and_schedule():
+    _, grads = _toy()
+    clipped, gn = clip_by_global_norm(grads, 1e-3)
+    cn = jnp.sqrt(sum(jnp.sum(jnp.square(g)) for g in jax.tree.leaves(clipped)))
+    assert float(cn) <= 1.1e-3
+    lr = cosine_schedule(1e-3, 10, 100)
+    assert float(lr(0)) == 0.0
+    assert abs(float(lr(10)) - 1e-3) < 1e-9
+    assert float(lr(100)) < 1e-5
+
+
+def test_int8_compression_roundtrip(rng):
+    x = jnp.asarray(rng.standard_normal((1000,)).astype(np.float32))
+    q, s = int8_compress(x)
+    back = int8_decompress(q, s, x.shape)
+    assert float(jnp.max(jnp.abs(back - x))) < float(jnp.max(jnp.abs(x))) / 100
+
+
+# ------------------------------ data ----------------------------------------
+
+def test_data_restart_exact():
+    d = SyntheticLMData(vocab=100, seq_len=16, global_batch=4, seed=3)
+    b1 = d.batch(7)
+    b2 = d.batch(7)                      # a "restarted" pipeline
+    assert np.array_equal(np.asarray(b1["tokens"]), np.asarray(b2["tokens"]))
+    assert not np.array_equal(np.asarray(d.batch(8)["tokens"]),
+                              np.asarray(b1["tokens"]))
+
+
+def test_length_bucketing_packs(rng):
+    lengths = rng.integers(1, 512, 200)
+    order, bounds = length_bucketed_batches(lengths, batch_tokens=4096)
+    assert sorted(order.tolist()) == list(range(200))
+    sl = lengths[order]
+    assert (np.diff(sl) >= 0).all()              # sorted by length
+    for a, b in zip(bounds[:-1], bounds[1:]):
+        assert sl[a:b].max() * (b - a) <= 4096   # every bucket fits
+
+
+# ------------------------------ checkpoint ----------------------------------
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(10, dtype=jnp.float32),
+            "b": {"c": jnp.ones((3, 4), jnp.bfloat16)}}
+    save_checkpoint(str(tmp_path), 5, tree)
+    assert latest_step(str(tmp_path)) == 5
+    like = jax.tree.map(jnp.zeros_like, tree)
+    back = restore_checkpoint(str(tmp_path), 5, like)
+    for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        assert np.array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_checkpoint_detects_corruption(tmp_path):
+    tree = {"a": jnp.arange(100, dtype=jnp.float32)}
+    path = save_checkpoint(str(tmp_path), 1, tree)
+    chunk = os.path.join(path, "chunk_000000.zst")
+    with open(chunk, "r+b") as f:
+        f.seek(4)
+        f.write(b"\x00\x01\x02")
+    with pytest.raises(IOError):
+        restore_checkpoint(str(tmp_path), 1, tree)
+
+
+def test_checkpoint_prunes_old(tmp_path):
+    tree = {"a": jnp.zeros(4)}
+    for s in [1, 2, 3, 4, 5]:
+        save_checkpoint(str(tmp_path), s, tree, keep=2)
+    steps = [latest_step(str(tmp_path))]
+    assert steps == [5]
+    assert not os.path.exists(os.path.join(str(tmp_path), "step_0000000001"))
+
+
+def test_async_checkpointer(tmp_path):
+    ck = AsyncCheckpointer(str(tmp_path))
+    tree = {"a": jnp.arange(16.0)}
+    ck.save(3, tree)
+    ck.wait()
+    assert latest_step(str(tmp_path)) == 3
+
+
+# ------------------------------ train loop (failure + resume) ---------------
+
+def test_train_resume_after_failure(tmp_path):
+    cfg = get_smoke_config("internlm2_1_8b")
+    data = SyntheticLMData(vocab=cfg.vocab, seq_len=16, global_batch=2)
+    tr = Trainer(cfg, data, str(tmp_path), ckpt_every=5, log_every=100,
+                 total_steps=50)
+    state = tr.init_or_resume(KEY)
+    state = tr.run(state, 7)                 # "crash" after step 7 (ckpt at 5)
+    losses_a = float(state.step)
+    assert losses_a == 7
+
+    tr2 = Trainer(cfg, data, str(tmp_path), ckpt_every=5, log_every=100,
+                  total_steps=50)
+    state2 = tr2.init_or_resume(KEY)
+    assert int(state2.step) == 5             # resumed from the checkpoint
+    state2 = tr2.run(state2, 5)
+    assert int(state2.step) == 10
+
+    # determinism: a run without failure reaches the same params at step 10
+    tr3 = Trainer(cfg, data, str(tmp_path) + "_b", ckpt_every=100,
+                  log_every=100, total_steps=50)
+    state3 = tr3.init_or_resume(KEY)
+    state3 = tr3.run(state3, 10)
+    err = max(float(jnp.max(jnp.abs(a - b)))
+              for a, b in zip(jax.tree.leaves(state2.params),
+                              jax.tree.leaves(state3.params)))
+    assert err < 1e-5, err
+
+
+def test_loss_decreases_on_tiny_model(tmp_path):
+    cfg = get_smoke_config("internlm2_1_8b")
+    data = SyntheticLMData(vocab=cfg.vocab, seq_len=32, global_batch=4)
+    tr = Trainer(cfg, data, str(tmp_path), ckpt_every=1000, log_every=1000,
+                 base_lr=3e-3, total_steps=60)
+    state = tr.init_or_resume(KEY)
+    losses = []
+    state = tr.run(state, 40, on_step=lambda s, st, m: losses.append(float(m["loss"])))
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.1, losses
+
+
+# ------------------------------ serving -------------------------------------
+
+def test_serve_engine_generates():
+    from repro.serve import ServeEngine, Request
+    cfg = get_smoke_config("internlm2_1_8b")
+    params = init_params(cfg, KEY)
+    eng = ServeEngine(cfg, params, batch_size=2, max_len=64)
+    rng = np.random.default_rng(0)
+    queue = [Request(i, rng.integers(0, cfg.vocab, rng.integers(3, 10)),
+                     max_new_tokens=int(rng.integers(4, 12)))
+             for i in range(5)]
+    batches = eng.schedule(queue)
+    assert sum(len(b) for b in batches) == 5
+    done = eng.generate(batches[0])
+    for r in done:
+        assert r.generated is not None and len(r.generated) == r.max_new_tokens
+        assert (r.generated >= 0).all() and (r.generated < cfg.vocab).all()
+
+
+def test_microbatched_grads_match_full():
+    """m-microbatch accumulation == full-batch gradient (mean loss)."""
+    from repro.train import make_train_step, TrainState
+    cfg = get_smoke_config("internlm2_1_8b")
+    data = SyntheticLMData(vocab=cfg.vocab, seq_len=16, global_batch=4)
+    from repro.models import init_params
+    params = init_params(cfg, KEY)
+    batch = data.batch(0)
+
+    opt1, step1 = make_train_step(cfg, donate=False)
+    opt4, step4 = make_train_step(cfg, donate=False, microbatches=4)
+    s1 = TrainState(params, opt1.init(params), jnp.int32(0))
+    s4 = TrainState(params, opt4.init(params), jnp.int32(0))
+    o1, m1 = step1(s1, batch)
+    o4, m4 = step4(s4, batch)
+    assert abs(float(m1["loss"]) - float(m4["loss"])) < 1e-5
+    err = max(float(jnp.max(jnp.abs(a - b)))
+              for a, b in zip(jax.tree.leaves(o1.params),
+                              jax.tree.leaves(o4.params)))
+    assert err < 1e-5, err

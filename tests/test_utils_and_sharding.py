@@ -1,0 +1,141 @@
+"""Unit tests: HLO collective parsing, roofline math, sharding rules,
+64-bit key support, gradient compression."""
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.utils.hlo import collective_bytes, collective_counts
+from repro.utils.roofline import Roofline, model_flops, PEAK_FLOPS
+
+
+HLO = """
+  %ar = f32[16,4096,2048]{2,1,0} all-reduce(%x), replica_groups={{0,1,2,3}}
+  %ag = bf16[8,128]{1,0} all-gather(%y), replica_groups=[32,16]<=[512]
+  %rs = f32[64]{0} reduce-scatter(%z), replica_groups={{0,1}}
+  %a2a = (bf16[4,8]{1,0}, bf16[4,8]{1,0}) all-to-all(%a, %b), replica_groups={{0,1,2,3}}
+  %cp = u32[10]{0} collective-permute(%c), source_target_pairs={{0,1}}
+  %notacoll = f32[2]{0} add(%p, %q)
+"""
+
+
+def test_collective_bytes_parsing():
+    out = collective_bytes(HLO, 512)
+    # all-reduce: 16*4096*2048*4 bytes * 2 * 3/4
+    assert abs(out["all-reduce"] - 16 * 4096 * 2048 * 4 * 2 * 0.75) < 1
+    # all-gather: 8*128*2 * 15/16 (group size 16 from [32,16] form)
+    assert abs(out["all-gather"] - 8 * 128 * 2 * 15 / 16) < 1
+    # reduce-scatter: out 64*4 * P=2 * 1/2
+    assert abs(out["reduce-scatter"] - 64 * 4 * 2 * 0.5) < 1
+    # permute: full size
+    assert abs(out["collective-permute"] - 40) < 1
+    assert out["total"] == sum(v for k, v in out.items() if k != "total")
+
+
+def test_collective_counts():
+    c = collective_counts(HLO)
+    assert c == {"all-reduce": 1, "all-gather": 1, "reduce-scatter": 1,
+                 "all-to-all": 1, "collective-permute": 1}
+
+
+def test_roofline_terms():
+    r = Roofline(arch="a", shape="s", step="train", mesh="pod", chips=256,
+                 flops_per_chip=197e12, hbm_bytes_per_chip=819e9,
+                 coll_bytes_per_chip=50e9, model_flops_global=197e12 * 256,
+                 mem_per_chip=8 * 2**30)
+    assert abs(r.t_compute - 1.0) < 1e-9
+    assert abs(r.t_memory - 1.0) < 1e-9
+    assert abs(r.t_collective - 1.0) < 1e-9
+    assert r.fits and abs(r.useful_flops_fraction - 1.0) < 1e-9
+
+
+def test_model_flops_kinds():
+    from repro.configs import get_config
+    from repro.configs.base import SHAPES
+    cfg = get_config("deepseek_7b")
+    n = cfg.active_param_count()
+    assert model_flops(cfg, SHAPES["train_4k"]) == 6.0 * n * SHAPES["train_4k"].tokens
+    assert model_flops(cfg, SHAPES["decode_32k"]) == 2.0 * n * 128
+
+
+def test_param_spec_rules():
+    from repro.launch.sharding import param_spec
+    from jax.sharding import PartitionSpec as P
+
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+        axis_names = ("data", "model")
+
+    from repro.configs import get_config
+    cfg = get_config("deepseek_67b")          # 64 heads, fsdp
+    mesh = FakeMesh()
+    # column-parallel q (stacked layer param)
+    assert param_spec("['layers']['attn']['wq']", (95, 8192, 8192), cfg, mesh) \
+        == P(None, None, "model")
+    # kv heads (8) not divisible by 16 and fsdp fallback on in-dim
+    assert param_spec("['layers']['attn']['wk']", (95, 8192, 1024), cfg, mesh) \
+        == P(None, "data", None)
+    # factored adafactor state for lm_head: rank-1 -> replicate
+    assert param_spec("['s']['lm_head']['vr']", (8192,), cfg, mesh) in (P(), P(None))
+    # musicgen: 24 heads padded to 32 (head_pad_to) -> attention now shards
+    mg = get_config("musicgen_medium")
+    assert mg.n_heads_padded == 32 and mg.n_kv_padded == 32
+    assert param_spec("['layers']['attn']['wq']", (48, 1536, 2048), mg, mesh) \
+        == P(None, None, "model")
+    assert param_spec("['layers']['mlp']['w_gate']", (48, 1536, 6144), mg, mesh) \
+        == P(None, None, "model")
+    # hymba keeps 25 unpadded heads -> attention replicates
+    hy = get_config("hymba_1_5b")
+    assert param_spec("['layers']['attn']['wq']", (32, 1600, 1600), hy, mesh) \
+        == P(None, None, None)
+
+
+def test_u64_keys_subprocess():
+    """64-bit keys need x64 — isolated in a subprocess."""
+    script = textwrap.dedent("""
+        import jax
+        jax.config.update("jax_enable_x64", True)
+        import sys; sys.path.insert(0, "src")
+        import numpy as np, jax.numpy as jnp
+        from repro.core import hybrid_sort, SortConfig
+        rng = np.random.default_rng(0)
+        x = rng.integers(0, 2**64, 20000, dtype=np.uint64)
+        cfg = SortConfig(d=8, kpb=64, local_threshold=48, merge_threshold=32)
+        out, stats = hybrid_sort(jnp.asarray(x), cfg=cfg, return_stats=True)
+        assert np.array_equal(np.sort(x), np.asarray(out))
+        xf = rng.standard_normal(5000)
+        assert np.array_equal(np.sort(xf), np.asarray(hybrid_sort(jnp.asarray(xf), cfg=cfg)))
+        print("U64-OK", int(stats.counting_passes))
+    """)
+    res = subprocess.run([sys.executable, "-c", script], capture_output=True,
+                         text=True, timeout=600)
+    assert "U64-OK" in res.stdout, res.stdout + res.stderr
+
+
+@pytest.mark.slow
+def test_compressed_psum_subprocess():
+    script = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import sys; sys.path.insert(0, "src")
+        import numpy as np, jax, jax.numpy as jnp
+        from jax.sharding import PartitionSpec as P
+        from repro.optim.compression import compressed_psum
+        mesh = jax.make_mesh((4,), ("pod",))
+        x = jnp.asarray(np.random.default_rng(0).standard_normal((4, 256)).astype(np.float32))
+        exact = jax.shard_map(lambda v: jax.lax.psum(v, "pod"), mesh=mesh,
+                              in_specs=P("pod"), out_specs=P())(x)
+        comp = jax.shard_map(lambda v: compressed_psum(v, "pod"), mesh=mesh,
+                             in_specs=P("pod"), out_specs=P(),
+                             check_vma=False)(x)
+        rel = float(jnp.max(jnp.abs(comp - exact)) / jnp.max(jnp.abs(exact)))
+        assert rel < 0.05, rel
+        print("COMP-OK", rel)
+    """)
+    res = subprocess.run([sys.executable, "-c", script], capture_output=True,
+                         text=True, timeout=600)
+    assert "COMP-OK" in res.stdout, res.stdout + res.stderr
