@@ -1,0 +1,47 @@
+"""Engine comparison sweep: hybrid_sort argsort vs kernel (BENCH_hybrid.json).
+
+Times the full sort and a single counting pass (``max_passes=1``) for both
+engines across a size sweep so the per-pass scaling is machine-readable:
+the argsort engine's pass costs O(n log n) comparisons, the kernel engine's
+costs O(n) traffic.  ``derived`` reports ns per key — flat for O(n), growing
+with log n for the argsort engine (modulo interpret-mode overhead on CPU).
+
+``python -m benchmarks.run --json`` writes the collected rows to
+``BENCH_hybrid.json`` as ``{name: us_per_call}``.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import timeit, row
+from repro.core import SortConfig, hybrid_sort
+
+# modest tile/thresholds: big enough to exercise multi-block segments, small
+# enough that interpret-mode Pallas stays tractable on one CPU core
+CFG = SortConfig(d=8, kpb=256, local_threshold=768, merge_threshold=512)
+ENGINES = ("argsort", "kernel")
+
+
+def collect(fast: bool = True) -> dict:
+    sizes = [1 << 12, 1 << 14] if fast else [1 << 14, 1 << 16, 1 << 18]
+    rng = np.random.default_rng(0)
+    out = {}
+    for n in sizes:
+        x = jnp.asarray(rng.integers(0, 2**32, n, dtype=np.uint32))
+        for eng in ENGINES:
+            us = timeit(lambda a, e=eng: hybrid_sort(a, cfg=CFG, engine=e),
+                        x) * 1e6
+            out[f"hybrid/sort/n={n}/{eng}"] = us
+            us1 = timeit(lambda a, e=eng: hybrid_sort(a, cfg=CFG, engine=e,
+                                                      max_passes=1), x) * 1e6
+            out[f"hybrid/pass/n={n}/{eng}"] = us1
+    return out
+
+
+def main(fast: bool = True) -> dict:
+    rows = collect(fast)
+    for name, us in rows.items():
+        n = int(name.split("n=")[1].split("/")[0])
+        row(f"engines/{name}", us, f"{1e3 * us / n:.2f}ns/key")
+    return rows

@@ -2,24 +2,32 @@
 
 Prints ``name,us_per_call,derived`` CSV.  ``--full`` uses paper-scale sizes
 (slow on one CPU core); the default is a reduced but structurally identical
-sweep.  ``python -m benchmarks.run [--full] [--only fig6,...]``
+sweep.  ``--json [PATH]`` additionally runs the engine-comparison sweep
+(argsort vs Pallas kernel engine) and writes ``{name: us_per_call}`` to PATH
+(default ``BENCH_hybrid.json``) so the perf trajectory is machine-readable.
+
+``python -m benchmarks.run [--full] [--only fig6,...] [--json [PATH]]``
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import traceback
 
 
 MODULES = ["fig2_histogram", "fig6_entropy", "fig7_sizes", "fig8_pipeline",
            "fig10_latest", "ablations", "model_table", "moe_dispatch",
-           "roofline"]
+           "roofline", "engines"]
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--json", nargs="?", const="BENCH_hybrid.json",
+                    default=None, metavar="PATH",
+                    help="write the engine-sweep rows to PATH as JSON")
     args = ap.parse_args()
     only = args.only.split(",") if args.only else None
 
@@ -27,12 +35,21 @@ def main() -> None:
     for name in MODULES:
         if only and not any(name.startswith(o) for o in only):
             continue
+        if name == "engines" and args.json is not None:
+            continue                     # ran below; don't time it twice
         try:
             mod = __import__(f"benchmarks.{name}", fromlist=["main"])
             mod.main(fast=not args.full)
         except Exception as e:
             traceback.print_exc(file=sys.stderr)
             print(f"{name}/ERROR,0.0,{type(e).__name__}")
+
+    if args.json is not None:
+        from benchmarks import engines
+        rows = engines.main(fast=not args.full)
+        with open(args.json, "w") as f:
+            json.dump(rows, f, indent=2, sort_keys=True)
+        print(f"# wrote {args.json}", file=sys.stderr)
 
 
 if __name__ == "__main__":

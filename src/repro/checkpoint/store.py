@@ -22,7 +22,35 @@ from typing import Any, Optional
 
 import msgpack
 import numpy as np
-import zstandard as zstd
+
+try:
+    import zstandard as zstd
+except ModuleNotFoundError:          # optional dep: fall back to stdlib zlib
+    import zlib
+
+    class _ZlibShim:
+        """Minimal ZstdCompressor/Decompressor stand-in (same call surface).
+
+        Chunks written by one codec are only readable by the same codec; on a
+        container without ``zstandard`` the checkpoints are zlib streams under
+        the same file names.
+        """
+        class ZstdCompressor:
+            def __init__(self, level: int = 3):
+                self._level = level
+
+            def compress(self, blob: bytes) -> bytes:
+                return zlib.compress(blob, self._level)
+
+        class ZstdDecompressor:
+            def decompress(self, comp: bytes) -> bytes:
+                if comp[:4] == b"\x28\xb5\x2f\xfd":   # zstd frame magic
+                    raise IOError(
+                        "checkpoint chunk is a zstd frame but the 'zstandard' "
+                        "module is not installed (saved on another machine?)")
+                return zlib.decompress(comp)
+
+    zstd = _ZlibShim()
 
 import jax
 import jax.numpy as jnp

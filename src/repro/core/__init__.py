@@ -13,9 +13,11 @@ from repro.core.hybrid import hybrid_sort, SortStats
 from repro.core.lsd import lsd_sort
 from repro.core.model import (SortConfig, default_config, memory_budget,
                               pass_counts, expected_speedup)
+from repro.core.ranks import ENGINES, resolve_engine
 
 __all__ = [
     "hybrid_sort", "lsd_sort", "SortStats", "SortConfig", "default_config",
     "memory_budget", "pass_counts", "expected_speedup",
     "to_ordered_bits", "from_ordered_bits", "key_bits",
+    "ENGINES", "resolve_engine",
 ]

@@ -19,6 +19,17 @@ Bucket state is carried *per key* (segment ids + done flags), which is the
 dense JAX analogue of the paper's block-assignment lists: monotone seg ids
 over positions encode exactly {b_id, b_offs}, and tile-aligned views of them
 drive the Pallas kernels' scalar prefetch.
+
+Three interchangeable engines compute each pass's permutation (byte-identical
+outputs, see ``core.ranks``):
+
+  * ``kernel``  — the paper's pipeline on Pallas kernels: block-assignment
+    descriptors (§4.2) feed one constant-size multisplit launch over all
+    active buckets (tile histogram → per-segment scan → coalesced run
+    copies, §4.3–§4.4), and done buckets finish through the padded
+    segmented bitonic local sort.  Zero comparison sorts in the traced HLO.
+  * ``argsort`` — two fused XLA stable sorts per pass; the CPU default.
+  * ``scan``    — the O(n) chunked-histogram fallback from ``core.ranks``.
 """
 from __future__ import annotations
 
@@ -30,7 +41,9 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core import bijection, model
-from repro.core.ranks import stable_partition_dest
+from repro.core.ranks import resolve_engine, stable_partition_dest
+from repro.kernels.ops import (apply_run_copies, segmented_kernel_pass,
+                               segmented_local_sort)
 
 
 class SortStats(NamedTuple):
@@ -71,32 +84,55 @@ def _merge_rows(hist: jnp.ndarray, local_threshold: int, merge_threshold: int):
     return jax.vmap(row)(hist)
 
 
-def _counting_pass(ukeys, vals, seg_id, done, pass_idx, *, k, d, a_max, cfg):
+def _counting_pass(ukeys, vals, seg_id, done, pass_idx, *, k, d, a_max, g_max,
+                   cfg, engine, interpret):
     """One counting-sort pass over all active buckets simultaneously."""
     n = ukeys.shape[0]
     r = 1 << d
-    digit = _digit_at(ukeys, pass_idx, k, d)
     active = ~done
     boundary = jnp.concatenate([jnp.ones((1,), bool),
                                 seg_id[1:] != seg_id[:-1]])
     astart = boundary & active
     asid = jnp.cumsum(astart.astype(jnp.int32)) - 1          # active-segment index
-    # (a, digit) histogram — only active keys contribute (M2 of the model)
-    idx = jnp.where(active, asid * r + digit, 0)
-    hist = jnp.zeros((a_max * r,), jnp.int32).at[idx].add(active.astype(jnp.int32))
-    hist = hist.reshape(a_max, r)
     active_base = jnp.nonzero(astart, size=a_max, fill_value=n)[0].astype(jnp.int32)
 
-    # destination permutation: stable partition by (active segment, digit);
-    # done keys carry a +inf-like composite and stay in place.
-    sentinel = jnp.int32(a_max * r)
-    composite = jnp.where(active, asid * r + digit, sentinel)
-    perm = jnp.argsort(composite, stable=True)
-    slots = jnp.argsort(done, stable=True).astype(jnp.int32)  # active slots asc, then done slots asc
-    dest = jnp.zeros((n,), jnp.int32).at[perm].set(slots)
+    if engine == "kernel":
+        # Pre-shift so the kernels extract the pass's digit at a *static*
+        # position (low d bits).  On a partial-width last pass the extra high
+        # bits are the bucket's shared, already-processed prefix — constant
+        # within every segment, so the partition and the (column-shifted)
+        # merge bookkeeping are unchanged.
+        udt = ukeys.dtype
+        hi = k - pass_idx * d
+        lo = jnp.maximum(hi - d, 0).astype(udt)
+        shifted = ukeys >> lo
+        digit = (shifted & jnp.array(r - 1, udt)).astype(jnp.int32)
+        asize = jnp.zeros((a_max,), jnp.int32).at[
+            jnp.where(active, asid, a_max)].add(1, mode="drop")
+        src, dst, hist = segmented_kernel_pass(
+            shifted, active_base, asize, d, cfg.kpb, g_max,
+            interpret=interpret)
+    else:
+        digit = _digit_at(ukeys, pass_idx, k, d)
+        # (a, digit) histogram — only active keys contribute (M2 of the model)
+        idx = jnp.where(active, asid * r + digit, 0)
+        hist = jnp.zeros((a_max * r,), jnp.int32).at[idx].add(
+            active.astype(jnp.int32)).reshape(a_max, r)
 
-    new_keys = jnp.zeros_like(ukeys).at[dest].set(ukeys)
-    new_vals = jax.tree.map(lambda v: jnp.zeros_like(v).at[dest].set(v), vals)
+        # destination permutation: stable partition by (active segment, digit);
+        # done keys carry a +inf-like composite and stay in place.
+        sentinel = jnp.int32(a_max * r)
+        composite = jnp.where(active, asid * r + digit, sentinel)
+        dest0 = stable_partition_dest(composite, a_max * r + 1, engine=engine)
+        done_rank = stable_partition_dest(done.astype(jnp.int32), 2,
+                                          engine=engine)
+        slots = jnp.zeros((n,), jnp.int32).at[done_rank].set(
+            jnp.arange(n, dtype=jnp.int32))   # active slots asc, then done asc
+        dest = slots[dest0]
+
+        new_keys = jnp.zeros_like(ukeys).at[dest].set(ukeys)
+        new_vals = jax.tree.map(lambda v: jnp.zeros_like(v).at[dest].set(v),
+                                vals)
 
     # bucket bookkeeping: merged-group starts (R3) become the new boundaries
     gstart, gdone = _merge_rows(hist, cfg.local_threshold, cfg.merge_threshold)
@@ -110,32 +146,73 @@ def _counting_pass(ukeys, vals, seg_id, done, pass_idx, *, k, d, a_max, cfg):
     nb = nb.at[0].set(True)
     new_seg = (jnp.cumsum(nb.astype(jnp.int32)) - 1)
 
-    key_gdone = gdone.reshape(-1)[idx]
-    new_done = jnp.zeros((n,), bool).at[dest].set(jnp.where(active, key_gdone, True))
+    key_gdone = gdone.reshape(-1)[jnp.where(active, asid * r + digit, 0)]
+    if engine == "kernel":
+        # run copies: done keys keep their slots, active slots are overwritten
+        new_keys, new_vals = apply_run_copies(src, dst, (ukeys, vals))
+        new_done = done.at[dst].set(key_gdone[jnp.clip(src, 0, n - 1)],
+                                    mode="drop")
+    else:
+        new_done = jnp.zeros((n,), bool).at[dest].set(
+            jnp.where(active, key_gdone, True))
     return new_keys, new_vals, new_seg, new_done
 
 
-def _local_sort(ukeys, vals, seg_id):
-    """Finish all buckets in one read+write: sort by (bucket, remaining key).
+def _local_sort(ukeys, vals, seg_id, done):
+    """Finish done buckets in one read+write: sort by (bucket, remaining key).
 
     Keys within a bucket share their already-processed digit prefix, so
     ordering by the full key equals ordering by the remaining digits — this is
     the LSD-on-remaining-digits local sort of §4.1, realised as a segmented
     sort (the Pallas bitonic kernel is the on-TPU tile engine for it).
+
+    Only *done* buckets sort (masked key + stable lexsort keeps the rest in
+    place).  At genuine digit exhaustion non-done buckets hold equal keys so
+    this changes nothing; under ``max_passes`` truncation it keeps every
+    engine's output identical: partition-ordered, unfinished buckets as-is.
     """
-    perm = jnp.lexsort((ukeys, seg_id))
+    perm = jnp.lexsort((jnp.where(done, ukeys, jnp.zeros_like(ukeys)), seg_id))
     return ukeys[perm], jax.tree.map(lambda v: v[perm], vals)
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "k", "return_stats", "max_passes"))
+def _local_sort_kernel(ukeys, vals, seg_id, done, *, s_max, row_len, interpret):
+    """Kernel-engined local sort: done buckets gather into sentinel-padded
+    (S, L) rows (R1 guarantees L <= next_pow2(∂̂)), the stable bitonic kernel
+    sorts each row by (key, position), and the run copies scatter the sorted
+    prefixes back.  Non-done buckets at digit exhaustion hold equal keys, so
+    skipping them matches the jnp engines' stable lexsort exactly.
+    """
+    n = ukeys.shape[0]
+    boundary = jnp.concatenate([jnp.ones((1,), bool),
+                                seg_id[1:] != seg_id[:-1]])
+    starts = jnp.nonzero(boundary, size=s_max, fill_value=n)[0].astype(jnp.int32)
+    ends = jnp.concatenate([starts[1:], jnp.array([n], jnp.int32)])
+    sizes = ends - starts                                     # 0 on padding rows
+    sortable = done[jnp.clip(starts, 0, n - 1)] & (starts < n)
+    src, dst = segmented_local_sort(ukeys, starts, sizes, sortable, row_len,
+                                    interpret=interpret)
+    return apply_run_copies(src, dst, (ukeys, vals))
+
+
+def _local_row_len(n: int, cfg: model.SortConfig) -> int:
+    """Bitonic row width: next power of two covering a done bucket (<= ∂̂)."""
+    cap = max(1, min(cfg.local_threshold, n))
+    return 1 << (cap - 1).bit_length()
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "k", "return_stats",
+                                             "max_passes", "engine",
+                                             "interpret"))
 def _hybrid_sort_bits(ukeys, vals, cfg: model.SortConfig, k: int,
-                      return_stats: bool, max_passes: Optional[int] = None):
+                      return_stats: bool, max_passes: Optional[int] = None,
+                      engine: str = "argsort", interpret: bool = True):
     n = ukeys.shape[0]
     d = cfg.d
     nd = model.num_digits(k, d)
     if max_passes is not None:
         nd = min(nd, max_passes)
     a_max = model.max_active_buckets(n, cfg)
+    g_max = model.max_blocks(n, cfg)
 
     done0 = jnp.full((n,), n <= cfg.local_threshold)
     seg0 = jnp.zeros((n,), jnp.int32)
@@ -147,15 +224,23 @@ def _hybrid_sort_bits(ukeys, vals, cfg: model.SortConfig, k: int,
     def body(state):
         ukeys, vals, seg, done, p = state
         ukeys, vals, seg, done = _counting_pass(
-            ukeys, vals, seg, done, p, k=k, d=d, a_max=a_max, cfg=cfg)
+            ukeys, vals, seg, done, p, k=k, d=d, a_max=a_max, g_max=g_max,
+            cfg=cfg, engine=engine, interpret=interpret)
         return ukeys, vals, seg, done, p + 1
 
     ukeys, vals, seg, done, p = lax.while_loop(
         cond, body, (ukeys, vals, seg0, done0, jnp.int32(0)))
 
     needs_local = jnp.any(done)
-    ukeys, vals = lax.cond(needs_local, _local_sort,
-                           lambda k_, v_, s_: (k_, v_), ukeys, vals, seg)
+    if engine == "kernel":
+        finish = functools.partial(
+            _local_sort_kernel, s_max=model.max_total_buckets(n, cfg),
+            row_len=_local_row_len(n, cfg), interpret=interpret)
+    else:
+        finish = _local_sort
+    ukeys, vals = lax.cond(needs_local, finish,
+                           lambda k_, v_, s_, d_: (k_, v_),
+                           ukeys, vals, seg, done)
     if not return_stats:
         return ukeys, vals, None
     sizes = jnp.bincount(seg, length=n if n else 1)
@@ -167,22 +252,36 @@ def _hybrid_sort_bits(ukeys, vals, cfg: model.SortConfig, k: int,
 
 def hybrid_sort(keys: jnp.ndarray, values: Any = None,
                 cfg: Optional[model.SortConfig] = None,
-                return_stats: bool = False, max_passes: Optional[int] = None):
+                return_stats: bool = False, max_passes: Optional[int] = None,
+                engine: Optional[str] = None, interpret: Optional[bool] = None):
     """Sort ``keys`` (any supported primitive dtype) with the hybrid radix sort.
 
     ``values`` is an optional array or pytree of arrays permuted alongside the
     keys (decomposed key-value layout, §4.6).  Pair movement is consistent but
     — by the paper's central design choice — NOT stable across equal keys.
 
+    ``engine`` selects the per-pass partition engine: ``"kernel"`` (the Pallas
+    counting-pass pipeline — histogram, multisplit, run copies — plus the
+    bitonic local sort), ``"argsort"`` (fused XLA stable sorts), or ``"scan"``
+    (the O(n) chunked jnp fallback).  ``None`` defers to ``cfg.rank_engine``
+    (``"auto"`` by default), and ``"auto"`` picks the backend default:
+    ``kernel`` on TPU, ``argsort`` elsewhere.  All engines produce
+    byte-identical output.  ``interpret`` forces Pallas interpret mode (on by
+    default off-TPU).
+
     Returns ``sorted_keys``, or ``(sorted_keys, permuted_values)`` if values
     were given; append ``stats`` when ``return_stats``.
     """
     if keys.ndim != 1:
         raise ValueError("hybrid_sort expects a 1-D key array")
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
     k = bijection.key_bits(keys.dtype)
     if k > 32 and not jax.config.jax_enable_x64:
         raise RuntimeError("64-bit keys require jax_enable_x64")
     cfg = cfg or model.default_config(k // 8)
+    # explicit argument > cfg.rank_engine > backend default
+    engine = resolve_engine(engine if engine is not None else cfg.rank_engine)
     n = keys.shape[0]
     if n == 0:
         out = (keys, values) if values is not None else keys
@@ -195,7 +294,7 @@ def hybrid_sort(keys: jnp.ndarray, values: Any = None,
     ukeys = bijection.to_ordered_bits(keys)
     vals = values if values is not None else ()
     ukeys, vals, stats = _hybrid_sort_bits(ukeys, vals, cfg, k, return_stats,
-                                           max_passes)
+                                           max_passes, engine, interpret)
     out_keys = bijection.from_ordered_bits(ukeys, keys.dtype)
     if values is None:
         return (out_keys, stats) if return_stats else out_keys

@@ -5,6 +5,11 @@ or 5 bits per *stable* pass (CUB 1.5.1: d=5; CUB 1.6.4 appendix: up to d=7).
 This module is the measured baseline the hybrid sort is compared against: the
 pass structure (⌈k/d⌉ stable counting passes, each reading the input twice and
 writing once) is what produces the paper's 1.6–1.75x traffic ratio.
+
+``lsd_sort`` routes through the same engine selector as ``hybrid_sort``:
+``argsort``/``scan`` compute each pass's permutation in jnp, ``kernel`` runs
+the Pallas tile-multisplit pipeline (shifts are static here, so the passes
+unroll and feed the kernels directly).
 """
 from __future__ import annotations
 
@@ -16,18 +21,31 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core import bijection, model
-from repro.core.ranks import stable_partition_dest
+from repro.core.ranks import resolve_engine, stable_partition_dest
+from repro.kernels.ops import apply_run_copies, kernel_pass_perm
 
 
-@functools.partial(jax.jit, static_argnames=("d", "k", "engine"))
-def _lsd_sort_bits(ukeys, vals, d: int, k: int, engine: str):
+@functools.partial(jax.jit, static_argnames=("d", "k", "engine", "kpb",
+                                             "interpret"))
+def _lsd_sort_bits(ukeys, vals, d: int, k: int, engine: str, kpb: int,
+                   interpret: bool):
     nd = model.num_digits(k, d)
     udt = ukeys.dtype
+
+    if engine == "kernel":
+        # LSD shifts are compile-time constants, so the pass loop unrolls and
+        # each pass is one multisplit launch + run copies (src/dst pairs).
+        for p in range(nd):
+            shift = p * d
+            width = min(d, k - shift)  # partial top digit on the last pass
+            src, dst = kernel_pass_perm(ukeys, shift, width, k, kpb=kpb,
+                                        interpret=interpret)
+            ukeys, vals = apply_run_copies(src, dst, (ukeys, vals))
+        return ukeys, vals
 
     def body(p, state):
         ukeys, vals = state
         shift = jnp.array(p * d, udt)
-        width = min(d, k - 0)  # all but maybe the last pass use full width
         # handle partial top digit: pass p covers bits [p*d, min((p+1)*d, k))
         width = jnp.minimum(d, k - p * d).astype(udt)
         mask = ((jnp.array(1, udt) << width) - 1).astype(udt)
@@ -42,15 +60,23 @@ def _lsd_sort_bits(ukeys, vals, d: int, k: int, engine: str):
 
 
 def lsd_sort(keys: jnp.ndarray, values: Any = None, d: int = 5,
-             engine: str = "argsort"):
-    """Stable LSD radix sort with ``d``-bit digits (default 5 — the CUB proxy)."""
+             engine: Optional[str] = None, kpb: int = 1024,
+             interpret: Optional[bool] = None):
+    """Stable LSD radix sort with ``d``-bit digits (default 5 — the CUB proxy).
+
+    ``engine`` is resolved like ``hybrid_sort``'s (``argsort``/``scan``/
+    ``kernel``/``auto``); ``kpb`` is the kernel engine's keys-per-block.
+    """
     if keys.ndim != 1:
         raise ValueError("lsd_sort expects a 1-D key array")
+    engine = resolve_engine(engine)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
     k = bijection.key_bits(keys.dtype)
     if keys.shape[0] == 0:
         return keys if values is None else (keys, values)
     ukeys = bijection.to_ordered_bits(keys)
     vals = values if values is not None else ()
-    ukeys, vals = _lsd_sort_bits(ukeys, vals, d, k, engine)
+    ukeys, vals = _lsd_sort_bits(ukeys, vals, d, k, engine, kpb, interpret)
     out = bijection.from_ordered_bits(ukeys, keys.dtype)
     return out if values is None else (out, vals)

@@ -18,7 +18,7 @@ class SortConfig:
     kpb: int = 3456            # keys per block (tile), per Table 3
     local_threshold: int = 4224   # ∂̂ — buckets <= this are locally sorted
     merge_threshold: int = 3000   # ∂ — merge runs of sub-buckets below this
-    rank_engine: str = "argsort"  # permutation engine (see core.ranks)
+    rank_engine: str = "auto"  # pass engine default (see core.ranks.resolve_engine)
 
     def __post_init__(self):
         if not (0 < self.d <= 16):

@@ -12,10 +12,17 @@ Two engines compute the same permutation:
     (and a perfectly good TPU fallback).
   * ``scan``    — the paper-faithful O(n) two-level scheme: per-chunk
     histograms + in-chunk ranks (what the Pallas kernels implement per tile),
-    with a carried running histogram across chunks.  Used by tests to validate
-    the kernel math and available for small radices.
+    with a carried running histogram across chunks.  A first-class fallback
+    engine wherever the Pallas kernels are unavailable but O(n log n)
+    comparison sorts are unwanted.
 
-Both return ``dest`` with the meaning: element i moves to slot ``dest[i]``.
+A third engine name, ``kernel``, selects the Pallas tile pipeline (histogram →
+multisplit → run copies); it lives in ``repro.kernels.ops`` because it moves
+keys directly rather than producing a standalone ``dest`` array.  The sort
+drivers accept any of the three (or ``auto``) and route through
+``resolve_engine`` below.
+
+Both jnp engines return ``dest`` with: element i moves to slot ``dest[i]``.
 """
 from __future__ import annotations
 
@@ -23,6 +30,24 @@ import functools
 
 import jax
 import jax.numpy as jnp
+
+#: Engines understood by the sort drivers (hybrid_sort / lsd_sort).
+ENGINES = ("argsort", "scan", "kernel")
+
+
+def resolve_engine(engine=None, backend=None) -> str:
+    """Resolve ``None``/``"auto"`` to the per-backend default engine.
+
+    TPUs default to the Pallas ``kernel`` engine (the paper's O(n) pipeline);
+    everything else defaults to ``argsort`` — interpret-mode kernels are
+    bit-exact but slow, so on CPU they are opt-in.
+    """
+    if engine in (None, "auto"):
+        backend = backend or jax.default_backend()
+        return "kernel" if backend == "tpu" else "argsort"
+    if engine not in ENGINES:
+        raise ValueError(f"unknown engine {engine!r}; expected one of {ENGINES}")
+    return engine
 
 
 def invert_permutation(perm: jnp.ndarray) -> jnp.ndarray:
@@ -68,10 +93,19 @@ def stable_partition_dest_scan(bucket: jnp.ndarray, num_buckets: int,
                              jnp.cumsum(hists, axis=0)[:-1].astype(jnp.int32)])
 
     def tile_ranks(row, carry_row):
-        onehot = jax.nn.one_hot(row, nb, dtype=jnp.int32)    # (chunk, nb)
-        incl = jnp.cumsum(onehot, axis=0)
-        excl = incl - onehot                                 # rank within tile
-        in_tile = jnp.take_along_axis(excl, row[:, None], axis=1)[:, 0]
+        if nb <= 4096:
+            onehot = jax.nn.one_hot(row, nb, dtype=jnp.int32)  # (chunk, nb)
+            incl = jnp.cumsum(onehot, axis=0)
+            excl = incl - onehot                               # rank within tile
+            in_tile = jnp.take_along_axis(excl, row[:, None], axis=1)[:, 0]
+        else:
+            # wide bucket spaces (the hybrid's composite segment x digit ids)
+            # would make the one-hot (chunk, nb) matrix explode; count equal
+            # predecessors pairwise instead — O(chunk) per element, still O(n)
+            # overall with the chunk size fixed.
+            i = jnp.arange(row.shape[0])
+            eq_before = (row[None, :] == row[:, None]) & (i[None, :] < i[:, None])
+            in_tile = eq_before.sum(axis=1).astype(jnp.int32)
         return g_off[row] + carry_row[row] + in_tile
 
     dest = jax.vmap(tile_ranks)(tiles, carry).reshape(-1)
@@ -83,5 +117,8 @@ def stable_partition_dest(bucket: jnp.ndarray, num_buckets: int,
     if engine == "argsort":
         return stable_partition_dest_argsort(bucket)
     if engine == "scan":
-        return stable_partition_dest_scan(bucket, num_buckets)
+        # wide bucket spaces take the pairwise in-chunk rank path, whose
+        # time/memory is O(n * chunk) — shrink the chunk to keep it O(n)-ish
+        chunk = 2048 if num_buckets <= 4096 else 256
+        return stable_partition_dest_scan(bucket, num_buckets, chunk=chunk)
     raise ValueError(f"unknown rank engine {engine!r}")

@@ -4,15 +4,25 @@ histogram   — one-hot MXU contraction histogram (§4.3's atomics, TPU-native)
 multisplit  — in-VMEM tile partition + write combining (§4.4 / Fig. 3)
 bitonic     — VMEM local sort (§4.1's local sort; CUB BlockRadixSort analogue)
 assigned    — scalar-prefetch block descriptors (§4.2 constant-invocation trick)
-ops         — jit'd composition into full counting passes
+ops         — jit'd composition into full counting passes (the sort's engine)
 ref         — pure-jnp oracles
 """
 from repro.kernels.histogram import radix_histogram
 from repro.kernels.multisplit import tile_multisplit, tile_multisplit_kv
-from repro.kernels.bitonic import bitonic_sort_rows, bitonic_sort_rows_kv
-from repro.kernels.assigned import assigned_histogram
-from repro.kernels.ops import kernel_counting_pass, kernel_local_sort
+from repro.kernels.bitonic import (bitonic_sort_rows, bitonic_sort_rows_kv,
+                                   bitonic_sort_rows_stable)
+from repro.kernels.assigned import (assigned_histogram, BlockAssignment,
+                                    make_block_assignments)
+from repro.kernels.ops import (kernel_counting_pass, kernel_counting_pass_kv,
+                               kernel_pass_perm, kernel_local_sort,
+                               segmented_kernel_pass, segmented_local_sort,
+                               tile_histogram_pass)
 
-__all__ = ["radix_histogram", "tile_multisplit", "tile_multisplit_kv", "bitonic_sort_rows",
-           "bitonic_sort_rows_kv", "assigned_histogram",
-           "kernel_counting_pass", "kernel_local_sort"]
+__all__ = [
+    "radix_histogram", "tile_multisplit", "tile_multisplit_kv",
+    "bitonic_sort_rows", "bitonic_sort_rows_kv", "bitonic_sort_rows_stable",
+    "assigned_histogram", "BlockAssignment", "make_block_assignments",
+    "kernel_counting_pass", "kernel_counting_pass_kv", "kernel_pass_perm",
+    "kernel_local_sort", "segmented_kernel_pass", "segmented_local_sort",
+    "tile_histogram_pass",
+]

@@ -57,8 +57,44 @@ def _swap_lanes(x, stride):
     return y.reshape(b, l)
 
 
+def _bitonic_stages_stable(keys, idx):
+    """Bitonic network on (key, idx) with lexicographic compares.
+
+    ``idx`` doubles as tie-break and payload: distinct per-lane indices make
+    every compare strict, so the sort is deterministic for duplicate keys and
+    an all-ones pad key cannot mix with a real all-ones key (pads carry the
+    largest indices).  Returns keys sorted by (key, idx) plus the matching
+    index permutation — the driver gathers values through it (§4.6).
+    """
+    l = keys.shape[-1]
+    assert (l & (l - 1)) == 0, "bitonic needs power-of-two rows"
+    n_lev = l.bit_length() - 1
+    pos = jax.lax.broadcasted_iota(jnp.int32, keys.shape, 1)
+    for size_log in range(1, n_lev + 1):
+        size = 1 << size_log
+        for stride_log in range(size_log - 1, -1, -1):
+            stride = 1 << stride_log
+            partner = pos ^ stride
+            pk = _swap_lanes(keys, stride)
+            pi = _swap_lanes(idx, stride)
+            ascending = (pos & size) == 0
+            is_lower = partner > pos
+            take_min = ascending == is_lower
+            mine_is_min = (keys < pk) | ((keys == pk) & (idx < pi))
+            keep = take_min == mine_is_min
+            keys = jnp.where(keep, keys, pk)
+            idx = jnp.where(keep, idx, pi)
+    return keys, idx
+
+
 def _bitonic_kernel(keys_ref, out_ref):
     out_ref[...] = _bitonic_stages(keys_ref[...], None)[0]
+
+
+def _bitonic_stable_kernel(keys_ref, idx_ref, out_k_ref, out_i_ref):
+    k, i = _bitonic_stages_stable(keys_ref[...], idx_ref[...])
+    out_k_ref[...] = k
+    out_i_ref[...] = i
 
 
 def _bitonic_kv_kernel(keys_ref, vals_ref, out_k_ref, out_v_ref):
@@ -79,6 +115,30 @@ def bitonic_sort_rows(keys: jnp.ndarray, interpret: bool = True) -> jnp.ndarray:
         out_shape=jax.ShapeDtypeStruct((s, l), keys.dtype),
         interpret=interpret,
     )(keys)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def bitonic_sort_rows_stable(keys: jnp.ndarray, idx: jnp.ndarray,
+                             interpret: bool = True):
+    """Sort (S, L) rows by (key, idx) lexicographically; L a power of two.
+
+    ``idx`` must be distinct within each row (e.g. global positions): the sort
+    is then stable in the original order and safe against sentinel-padding
+    collisions — the segmented local-sort path of the hybrid sort's kernel
+    engine relies on both properties.
+    """
+    s, l = keys.shape
+    return pl.pallas_call(
+        _bitonic_stable_kernel,
+        grid=(s,),
+        in_specs=[pl.BlockSpec((1, l), lambda i: (i, 0)),
+                  pl.BlockSpec((1, l), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((1, l), lambda i: (i, 0)),
+                   pl.BlockSpec((1, l), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((s, l), keys.dtype),
+                   jax.ShapeDtypeStruct((s, l), idx.dtype)],
+        interpret=interpret,
+    )(keys, idx)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))

@@ -42,10 +42,11 @@ def _from_halves(hs, dtype, bits: int):
     return out
 
 
-def _multisplit_kernel(keys_ref, sorted_ref, digit_ref, rank_ref, hist_ref, *,
-                       shift: int, width: int, key_bits: int):
+def _tile_partition(keys, *, shift: int, width: int):
+    """Shared in-VMEM partition math: digits, per-digit run offsets, the
+    (KPB, KPB) permutation matrix, and an ``apply`` closure that moves any
+    payload through the MXU exactly (16-bit halves)."""
     r = 1 << width
-    keys = keys_ref[0]                                    # (KPB,)
     kpb = keys.shape[0]
     digit = ((keys >> jnp.array(shift, keys.dtype)) &
              jnp.array(r - 1, keys.dtype)).astype(jnp.int32)
@@ -58,29 +59,37 @@ def _multisplit_kernel(keys_ref, sorted_ref, digit_ref, rank_ref, hist_ref, *,
     run_off = jnp.cumsum(hist) - hist                          # in-tile run starts
 
     # local destination of key i (digit-major slot) — gather-free via one-hot
-    local_dest = jnp.sum(onehot * (run_off[None, :] + excl_local), axis=1)
+    # (dtype pinned: under jax_enable_x64 an int32 sum would widen to int64)
+    local_dest = jnp.sum(onehot * (run_off[None, :] + excl_local), axis=1,
+                         dtype=jnp.int32)
 
     # permutation via MXU: M[j, i] = [local_dest[i] == j]
     iota_j = jax.lax.broadcasted_iota(jnp.int32, (kpb, kpb), 0)
     perm = (iota_j == local_dest[None, :]).astype(jnp.float32)  # (KPB, KPB)
 
-    halves = _halves(keys, key_bits)
-    sorted_halves = [jax.lax.dot_general(perm, h[:, None],
-                                         (((1,), (0,)), ((), ())),
-                                         preferred_element_type=jnp.float32)[:, 0]
-                     for h in halves]
-    sorted_keys = _from_halves(sorted_halves, keys.dtype, key_bits)
+    def apply_perm(x, bits):
+        hs = _halves(x, bits)
+        out = [jax.lax.dot_general(perm, h[:, None], (((1,), (0,)), ((), ())),
+                                   preferred_element_type=jnp.float32)[:, 0]
+               for h in hs]
+        return _from_halves(out, x.dtype, bits)
 
     sdig = jax.lax.dot_general(perm, digit.astype(jnp.float32)[:, None],
                                (((1,), (0,)), ((), ())),
                                preferred_element_type=jnp.float32)[:, 0]
     sorted_digit = jnp.round(sdig).astype(jnp.int32)
-
     pos = jax.lax.broadcasted_iota(jnp.int32, (kpb,), 0)
     onehot_s = (sorted_digit[:, None] == iota_r).astype(jnp.int32)
-    rank = pos - jnp.sum(onehot_s * run_off[None, :], axis=1)
+    rank = pos - jnp.sum(onehot_s * run_off[None, :], axis=1, dtype=jnp.int32)
+    return apply_perm, sorted_digit, rank, hist
 
-    sorted_ref[0] = sorted_keys
+
+def _multisplit_kernel(keys_ref, sorted_ref, digit_ref, rank_ref, hist_ref, *,
+                       shift: int, width: int, key_bits: int):
+    keys = keys_ref[0]                                    # (KPB,)
+    apply_perm, sorted_digit, rank, hist = _tile_partition(
+        keys, shift=shift, width=width)
+    sorted_ref[0] = apply_perm(keys, key_bits)
     digit_ref[0] = sorted_digit
     rank_ref[0] = rank
     hist_ref[0] = hist
@@ -93,42 +102,14 @@ def _multisplit_kv_kernel(keys_ref, vals_ref, sorted_ref, vout_ref, digit_ref,
     values, which is exactly the paper's 'reuse the stored offsets for the
     value pass' — here the MXU applies the permutation twice instead of the
     thread replaying its recorded offsets."""
-    r = 1 << width
     keys = keys_ref[0]
     vals = vals_ref[0]
-    kpb = keys.shape[0]
-    digit = ((keys >> jnp.array(shift, keys.dtype)) &
-             jnp.array(r - 1, keys.dtype)).astype(jnp.int32)
-
-    iota_r = jax.lax.broadcasted_iota(jnp.int32, (kpb, r), 1)
-    onehot = (digit[:, None] == iota_r).astype(jnp.int32)
-    incl = jnp.cumsum(onehot, axis=0)
-    excl_local = incl - onehot
-    hist = incl[-1]
-    run_off = jnp.cumsum(hist) - hist
-    local_dest = jnp.sum(onehot * (run_off[None, :] + excl_local), axis=1)
-
-    iota_j = jax.lax.broadcasted_iota(jnp.int32, (kpb, kpb), 0)
-    perm = (iota_j == local_dest[None, :]).astype(jnp.float32)
-
-    def apply_perm(x, bits):
-        hs = _halves(x, bits)
-        out = [jax.lax.dot_general(perm, h[:, None], (((1,), (0,)), ((), ())),
-                                   preferred_element_type=jnp.float32)[:, 0]
-               for h in hs]
-        return _from_halves(out, x.dtype, bits)
-
+    apply_perm, sorted_digit, rank, hist = _tile_partition(
+        keys, shift=shift, width=width)
     sorted_ref[0] = apply_perm(keys, key_bits)
     vout_ref[0] = apply_perm(vals, val_bits)
-
-    sdig = jax.lax.dot_general(perm, digit.astype(jnp.float32)[:, None],
-                               (((1,), (0,)), ((), ())),
-                               preferred_element_type=jnp.float32)[:, 0]
-    sorted_digit = jnp.round(sdig).astype(jnp.int32)
-    pos = jax.lax.broadcasted_iota(jnp.int32, (kpb,), 0)
-    onehot_s = (sorted_digit[:, None] == iota_r).astype(jnp.int32)
     digit_ref[0] = sorted_digit
-    rank_ref[0] = pos - jnp.sum(onehot_s * run_off[None, :], axis=1)
+    rank_ref[0] = rank
     hist_ref[0] = hist
 
 

@@ -83,6 +83,40 @@ def collective_bytes(hlo_text: str, num_devices: int) -> Dict[str, float]:
     return dict(out)
 
 
+# ----- generic op census (used to certify sort-free kernel engines) --------
+
+# Lowered text is either StableHLO ("%3 = stablehlo.sort(...)" /
+# '"stablehlo.sort"(...)') or HLO text ("%x = ... sort(...)").  Attribute
+# noise like ``indices_are_sorted=`` or function names like ``@argsort`` must
+# not count, hence the tight patterns.
+_STABLEHLO_OP_RE = re.compile(r'"?stablehlo\.([\w.]+)"?\(')
+_HLO_OP_RE = re.compile(r"=\s*(?:\([^)]*\)|\S+)\s+([a-z][\w-]*)\(")
+
+
+def op_counts(hlo_text: str) -> Dict[str, int]:
+    """Histogram of op names appearing in lowered StableHLO/HLO text."""
+    out: Dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = _STABLEHLO_OP_RE.search(line)
+        if m:
+            out[m.group(1)] += 1
+            continue
+        m = _HLO_OP_RE.search(line)
+        if m:
+            out[m.group(1)] += 1
+    return dict(out)
+
+
+def sort_op_count(hlo_text: str) -> int:
+    """Number of (stable)HLO ``sort`` ops in lowered text.
+
+    ``jnp.argsort``/``jnp.lexsort``/``jnp.sort`` all lower to this op, so a
+    zero count certifies a computation is free of comparison sorts — the
+    acceptance gate for the Pallas kernel engine of ``hybrid_sort``.
+    """
+    return op_counts(hlo_text).get("sort", 0)
+
+
 def collective_counts(hlo_text: str) -> Dict[str, int]:
     out: Dict[str, int] = defaultdict(int)
     for line in hlo_text.splitlines():

@@ -3,7 +3,28 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:  # hypothesis is an optional test dependency (see pyproject.toml)
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:
+    def given(*_a, **_k):
+        return pytest.mark.skip(reason="hypothesis not installed")
+
+    def settings(*_a, **_k):
+        return lambda f: f
+
+    class st:  # noqa: N801 - stand-in for hypothesis.strategies
+        @staticmethod
+        def lists(*_a, **_k):
+            return None
+
+        @staticmethod
+        def integers(*_a, **_k):
+            return None
+
+        @staticmethod
+        def floats(*_a, **_k):
+            return None
 
 from repro.core import (hybrid_sort, lsd_sort, SortConfig, memory_budget,
                         expected_speedup, to_ordered_bits, from_ordered_bits)

@@ -7,9 +7,12 @@ import pytest
 from repro.kernels import ref
 from repro.kernels.histogram import radix_histogram
 from repro.kernels.multisplit import tile_multisplit
-from repro.kernels.bitonic import bitonic_sort_rows, bitonic_sort_rows_kv
-from repro.kernels.assigned import assigned_histogram
-from repro.kernels.ops import kernel_counting_pass, tile_histogram_pass
+from repro.kernels.bitonic import (bitonic_sort_rows, bitonic_sort_rows_kv,
+                                   bitonic_sort_rows_stable)
+from repro.kernels.assigned import assigned_histogram, make_block_assignments
+from repro.kernels.ops import (kernel_counting_pass, kernel_counting_pass_kv,
+                               kernel_pass_perm, segmented_kernel_pass,
+                               segmented_local_sort, tile_histogram_pass)
 from conftest import entropy_keys
 
 
@@ -151,3 +154,130 @@ def test_multisplit_kv_kernel(rng, vdtype):
         kmap = {(k, v) for k, v in zip(keys[t].tolist(), vals[t].tolist())}
         assert all((k, v) in kmap for k, v in
                    zip(np.asarray(sk)[t].tolist(), np.asarray(sv)[t].tolist()))
+
+
+# --------------------- kernel-engine drivers (ops.py) -----------------------
+
+@pytest.mark.parametrize("n", [100, 1000, 4096])
+def test_kernel_counting_pass_kv_pairs(rng, n):
+    """§4.6 pairs driver: values ride the multisplit permutation exactly."""
+    x = rng.integers(0, 2**32, n, dtype=np.uint32)
+    v = np.arange(n, dtype=np.int32)
+    ok, ov = kernel_counting_pass_kv(jnp.asarray(x), jnp.asarray(v), 24, 8, 32,
+                                     kpb=512, interpret=True)
+    p = np.argsort((x >> 24) & 0xFF, kind="stable")
+    assert np.array_equal(np.asarray(ok), x[p])
+    assert np.array_equal(np.asarray(ov), v[p])
+
+
+def test_kernel_pass_perm_full_lsd_with_pytree(rng):
+    """(src, dst) run copies move an arbitrary payload pytree through a full
+    LSD sort built only from kernel passes."""
+    n = 2000
+    x = rng.integers(0, 2**32, n, dtype=np.uint32)
+    keys = jnp.asarray(x)
+    vals = {"a": jnp.arange(n, dtype=jnp.int32),
+            "b": jnp.arange(n, dtype=jnp.float32) * 0.5}
+    import jax
+    for p in range(4):
+        src, dst = kernel_pass_perm(keys, shift=8 * p, width=8, key_bits=32,
+                                    kpb=512, interpret=True)
+        safe = jnp.clip(src, 0, n - 1)
+        keys = jnp.zeros_like(keys).at[dst].set(keys[safe], mode="drop")
+        vals = jax.tree.map(
+            lambda v: jnp.zeros_like(v).at[dst].set(v[safe], mode="drop"), vals)
+    assert np.array_equal(np.sort(x), np.asarray(keys))
+    va = np.asarray(vals["a"])
+    assert np.array_equal(x[va], np.sort(x))           # payload consistency
+    assert np.array_equal(va.astype(np.float32) * 0.5, np.asarray(vals["b"]))
+
+
+def test_segmented_kernel_pass_partitions_each_segment(rng):
+    """The descriptor-driven pass partitions every segment in place, stably,
+    and returns the per-segment histograms (M2)."""
+    n = 3000
+    x = rng.integers(0, 2**32, n, dtype=np.uint32)
+    bounds = [(0, 700), (700, 300), (1700, 1300)]      # gap: [1000,1700) inactive
+    seg_base = jnp.asarray([b for b, _ in bounds], jnp.int32)
+    seg_size = jnp.asarray([s for _, s in bounds], jnp.int32)
+    src, dst, seg_hist = segmented_kernel_pass(jnp.asarray(x), seg_base,
+                                               seg_size, 8, 256, 20,
+                                               interpret=True)
+    s, d = np.asarray(src), np.asarray(dst)
+    out = x.copy()
+    m = d < n
+    out[d[m]] = x[np.clip(s, 0, n - 1)[m]]
+    want = x.copy()
+    for b, sz in bounds:
+        seg = x[b:b + sz]
+        want[b:b + sz] = seg[np.argsort(seg & 0xFF, kind="stable")]
+    assert np.array_equal(out, want)
+    assert np.array_equal(out[1000:1700], x[1000:1700])   # gap untouched
+    for i, (b, sz) in enumerate(bounds):
+        assert np.array_equal(np.asarray(seg_hist)[i],
+                              np.bincount(x[b:b + sz] & 0xFF, minlength=256))
+
+
+def test_segmented_kernel_pass_empty_segments(rng):
+    """Zero-size rows of the static descriptor table contribute no blocks."""
+    n = 500
+    x = rng.integers(0, 2**32, n, dtype=np.uint32)
+    seg_base = jnp.asarray([0, 200, 200, 200], jnp.int32)
+    seg_size = jnp.asarray([200, 0, 0, 300], jnp.int32)
+    src, dst, _ = segmented_kernel_pass(jnp.asarray(x), seg_base, seg_size,
+                                        8, 64, 12, interpret=True)
+    s, d = np.asarray(src), np.asarray(dst)
+    out = x.copy()
+    m = d < n
+    out[d[m]] = x[np.clip(s, 0, n - 1)[m]]
+    want = x.copy()
+    for b, sz in [(0, 200), (200, 300)]:
+        seg = x[b:b + sz]
+        want[b:b + sz] = seg[np.argsort(seg & 0xFF, kind="stable")]
+    assert np.array_equal(out, want)
+
+
+def test_make_block_assignments_table(rng):
+    """Descriptor table: segment-major contiguous blocks, correct offsets,
+    padding rows invalid (model I4)."""
+    seg_base = jnp.asarray([0, 100, 400], jnp.int32)
+    seg_size = jnp.asarray([100, 0, 130], jnp.int32)   # 2 + 0 + 3 blocks @ kpb=50
+    ba = make_block_assignments(seg_base, seg_size, 50, 8)
+    assert np.asarray(ba.valid).tolist() == [True] * 5 + [False] * 3
+    assert np.asarray(ba.seg_idx)[:5].tolist() == [0, 0, 2, 2, 2]
+    assert np.asarray(ba.key_offset)[:5].tolist() == [0, 50, 400, 450, 500]
+    assert np.asarray(ba.blk_in_seg)[:5].tolist() == [0, 1, 0, 1, 2]
+    assert np.asarray(ba.first_block)[:5].tolist() == [0, 0, 2, 2, 2]
+
+
+def test_bitonic_stable_kernel_sentinel_safe(rng):
+    """(key, idx) lexicographic sort: stable under duplicates, and real
+    all-ones keys (== the padding sentinel) sort before pads (idx = n)."""
+    keys = np.array([[0xFFFFFFFF, 5, 0xFFFFFFFF, 1, 5, 0xFFFFFFFF, 0, 2]],
+                    np.uint32)
+    idx = np.arange(8, dtype=np.int32).reshape(1, 8)
+    sk, si = bitonic_sort_rows_stable(jnp.asarray(keys), jnp.asarray(idx),
+                                      interpret=True)
+    order = np.argsort(keys[0], kind="stable")
+    assert np.array_equal(np.asarray(sk)[0], keys[0][order])
+    assert np.array_equal(np.asarray(si)[0], order)    # full stability
+
+
+def test_segmented_local_sort_done_flags(rng):
+    """Only flagged segments are sorted; sentinel-colliding keys stay exact."""
+    n = 1000
+    x = rng.integers(0, 2**32, n, dtype=np.uint32)
+    x[10] = x[600] = 0xFFFFFFFF                        # collide with pad value
+    starts = jnp.asarray([0, 300, 640], jnp.int32)
+    sizes = jnp.asarray([300, 340, 360], jnp.int32)
+    flags = jnp.asarray([True, False, True])
+    src, dst = segmented_local_sort(jnp.asarray(x), starts, sizes, flags, 512,
+                                    interpret=True)
+    s, d = np.asarray(src), np.asarray(dst)
+    out = x.copy()
+    m = d < n
+    out[d[m]] = x[np.clip(s, 0, n - 1)[m]]
+    want = x.copy()
+    want[:300] = np.sort(x[:300])
+    want[640:] = np.sort(x[640:])
+    assert np.array_equal(out, want)
