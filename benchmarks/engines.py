@@ -3,11 +3,15 @@
 Times the full sort and a single counting pass (``max_passes=1``) for both
 engines across a size sweep so the per-pass scaling is machine-readable:
 the argsort engine's pass costs O(n log n) comparisons, the kernel engine's
-costs O(n) traffic.  ``derived`` reports ns per key — flat for O(n), growing
-with log n for the argsort engine (modulo interpret-mode overhead on CPU).
+is ONE fused Pallas launch moving O(n) bytes.  ``derived`` reports ns per
+key — flat for O(n), growing with log n for the argsort engine (modulo
+interpret-mode overhead on CPU).
 
-``python -m benchmarks.run --json`` writes the collected rows to
-``BENCH_hybrid.json`` as ``{name: us_per_call}``.
+``python -m benchmarks.run --json`` writes the collected rows plus derived
+``ratios/...`` entries (argsort-time / kernel-time, > 1 means the kernel
+engine wins) and a ``notes`` list that is non-empty whenever the kernel
+engine regresses below the argsort baseline — so BENCH files are
+self-interpreting.
 """
 from __future__ import annotations
 
@@ -23,8 +27,13 @@ CFG = SortConfig(d=8, kpb=256, local_threshold=768, merge_threshold=512)
 ENGINES = ("argsort", "kernel")
 
 
-def collect(fast: bool = True) -> dict:
-    sizes = [1 << 12, 1 << 14] if fast else [1 << 14, 1 << 16, 1 << 18]
+def collect(fast: bool = True, smoke: bool = False) -> dict:
+    if smoke:
+        sizes = [1 << 10]
+    elif fast:
+        sizes = [1 << 12, 1 << 14]
+    else:
+        sizes = [1 << 14, 1 << 16, 1 << 18]
     rng = np.random.default_rng(0)
     out = {}
     for n in sizes:
@@ -36,12 +45,48 @@ def collect(fast: bool = True) -> dict:
             us1 = timeit(lambda a, e=eng: hybrid_sort(a, cfg=CFG, engine=e,
                                                       max_passes=1), x) * 1e6
             out[f"hybrid/pass/n={n}/{eng}"] = us1
-    return out
+    return annotate(out)
 
 
-def main(fast: bool = True) -> dict:
-    rows = collect(fast)
+def annotate(rows: dict) -> dict:
+    """Add kernel-vs-argsort speedup ratios and regression notes in place.
+
+    ``ratios/<kind>/n=<n>`` = argsort_us / kernel_us (> 1: kernel faster).
+    ``notes`` is a list of human-readable warnings, non-empty whenever the
+    kernel engine is slower than the argsort baseline it must eventually
+    beat — the self-interpretation contract of BENCH_hybrid.json.
+    """
+    ratios = {}
+    notes = []
+    for name, us in list(rows.items()):
+        if not (isinstance(us, float) and name.endswith("/argsort")):
+            continue
+        kname = name[: -len("argsort")] + "kernel"
+        if kname not in rows:
+            continue
+        stem = name[: -len("/argsort")]
+        ratio = us / rows[kname] if rows[kname] else float("inf")
+        ratios[f"ratios/{stem}"] = ratio
+        if ratio < 1.0:
+            notes.append(
+                f"{stem}: kernel engine {1.0 / ratio:.2f}x SLOWER than "
+                f"argsort baseline (kernel {rows[kname]:.0f}us vs argsort "
+                f"{us:.0f}us)")
+    rows.update(ratios)
+    rows["notes"] = notes
+    return rows
+
+
+def main(fast: bool = True, smoke: bool = False) -> dict:
+    rows = collect(fast, smoke=smoke)
     for name, us in rows.items():
+        if name == "notes":
+            continue
+        if name.startswith("ratios/"):
+            row(f"engines/{name}", 0.0, f"{us:.3f}x-argsort-over-kernel")
+            continue
         n = int(name.split("n=")[1].split("/")[0])
         row(f"engines/{name}", us, f"{1e3 * us / n:.2f}ns/key")
+    for note in rows["notes"]:
+        print(f"# WARNING {note}")
     return rows

@@ -2,11 +2,17 @@
 
 Prints ``name,us_per_call,derived`` CSV.  ``--full`` uses paper-scale sizes
 (slow on one CPU core); the default is a reduced but structurally identical
-sweep.  ``--json [PATH]`` additionally runs the engine-comparison sweep
-(argsort vs Pallas kernel engine) and writes ``{name: us_per_call}`` to PATH
-(default ``BENCH_hybrid.json``) so the perf trajectory is machine-readable.
+sweep; ``--smoke`` shrinks the engine sweep to a CI-sized single point.
+``--json [PATH]`` additionally runs the engine-comparison sweep (argsort vs
+fused Pallas kernel engine) and writes the rows to PATH (default
+``BENCH_hybrid.json``) so the perf trajectory is machine-readable.  The JSON
+is self-interpreting: alongside the raw ``{name: us_per_call}`` rows it
+carries ``ratios/...`` speedup entries (argsort / kernel, > 1 means the
+kernel engine wins) and a ``notes`` list that is non-empty whenever the
+kernel engine regresses below the argsort baseline.
 
-``python -m benchmarks.run [--full] [--only fig6,...] [--json [PATH]]``
+``python -m benchmarks.run [--full] [--smoke] [--only fig6,...]
+                           [--json [PATH]]``
 """
 from __future__ import annotations
 
@@ -24,12 +30,16 @@ MODULES = ["fig2_histogram", "fig6_entropy", "fig7_sizes", "fig8_pipeline",
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run: engine sweep only, one small size")
     ap.add_argument("--only", default=None)
     ap.add_argument("--json", nargs="?", const="BENCH_hybrid.json",
                     default=None, metavar="PATH",
                     help="write the engine-sweep rows to PATH as JSON")
     args = ap.parse_args()
     only = args.only.split(",") if args.only else None
+    if args.smoke and only is None:
+        only = ["engines"]               # smoke: the acceptance-gated sweep
 
     print("name,us_per_call,derived")
     for name in MODULES:
@@ -39,17 +49,23 @@ def main() -> None:
             continue                     # ran below; don't time it twice
         try:
             mod = __import__(f"benchmarks.{name}", fromlist=["main"])
-            mod.main(fast=not args.full)
+            if name == "engines":
+                mod.main(fast=not args.full, smoke=args.smoke)
+            else:
+                mod.main(fast=not args.full)
         except Exception as e:
             traceback.print_exc(file=sys.stderr)
             print(f"{name}/ERROR,0.0,{type(e).__name__}")
 
     if args.json is not None:
         from benchmarks import engines
-        rows = engines.main(fast=not args.full)
+        rows = engines.main(fast=not args.full, smoke=args.smoke)
         with open(args.json, "w") as f:
             json.dump(rows, f, indent=2, sort_keys=True)
         print(f"# wrote {args.json}", file=sys.stderr)
+        if rows["notes"]:
+            print(f"# {len(rows['notes'])} regression note(s) in "
+                  f"{args.json}", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,27 @@
+#!/usr/bin/env bash
+# CI entry point: tier-1 pytest + an interpret-mode benchmark smoke pass.
+#
+# Everything runs on a plain CPU host: the Pallas kernels execute in
+# interpret mode (the drivers default to it off-TPU), so the fused-engine
+# parity and launch-count gates are exercised on every push without TPU
+# hardware.  Usage: scripts/ci.sh [extra pytest args...]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+
+echo "=== tier-1 tests ==="
+python -m pytest -q "$@"
+
+echo "=== benchmark smoke (interpret mode) ==="
+python -m benchmarks.run --json BENCH_smoke.json --smoke
+
+echo "=== smoke bench notes ==="
+python - <<'EOF'
+import json
+rows = json.load(open("BENCH_smoke.json"))
+for note in rows.get("notes", []):
+    print("WARNING:", note)
+print("smoke rows:", sum(1 for k in rows if k != "notes"))
+EOF

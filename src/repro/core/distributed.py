@@ -37,17 +37,39 @@ from repro.core.hybrid import hybrid_sort
 from repro.core.segmented import counting_partition, multiway_merge
 
 
-def _make_splitters(local_sample, axis_name: str):
+def _select_splitters(gsample_sorted: jnp.ndarray, nshards: int) -> jnp.ndarray:
+    """(nshards - 1,) splitters from a sorted global sample.
+
+    Guards the degenerate case where the gathered sample is smaller than the
+    shard count (e.g. ``num_chunks > n_local`` leaves empty chunks): the
+    regular stride would be 0 and ``gsample[0::0]`` is invalid.  With too few
+    samples every shard boundary collapses onto one splitter level; the
+    duplicate-rank interleaving of ``_dest_shards`` then spreads ties across
+    all shards, so correctness (global order) is preserved — only balance
+    degrades, which is the best any sample sort can do sample-starved.
+    """
+    total = gsample_sorted.shape[0]
+    step = total // nshards
+    if step == 0:
+        fill = (gsample_sorted[0] if total
+                else jnp.zeros((), gsample_sorted.dtype))
+        return jnp.full((nshards - 1,), fill, gsample_sorted.dtype)
+    sel = gsample_sorted[step::step][: nshards - 1]
+    pad = (nshards - 1) - sel.shape[0]
+    if pad > 0:  # unreachable for step >= 1; kept as a static safety net
+        sel = jnp.concatenate(
+            [sel, jnp.full((pad,), gsample_sorted[-1], gsample_sorted.dtype)])
+    return sel
+
+
+def _make_splitters(local_sample, axis_name: str, nshards: int):
     """Global shard splitters from a regular sample of the sorted local data
-    (deterministic sample sort)."""
-    nshards = jax.lax.axis_size(axis_name)
+    (deterministic sample sort).  ``nshards`` is the static mesh axis size."""
     gsample = jax.lax.all_gather(local_sample, axis_name).reshape(-1)
-    gsample = jnp.sort(gsample)
-    step = gsample.shape[0] // nshards
-    return gsample[step::step][: nshards - 1]
+    return _select_splitters(jnp.sort(gsample), nshards)
 
 
-def _dest_shards(sorted_ukeys, splitters, axis_name: str):
+def _dest_shards(sorted_ukeys, splitters, axis_name: str, nshards: int):
     """Destination shard per (locally sorted) key.
 
     Ties with splitter values are cycled across their allowed shard range —
@@ -55,7 +77,6 @@ def _dest_shards(sorted_ukeys, splitters, axis_name: str):
     the per-(source, dest) load <= chunk/spread so the static all_to_all
     capacity holds even for the constant (zero-entropy) distribution.
     """
-    nshards = jax.lax.axis_size(axis_name)
     my = jax.lax.axis_index(axis_name)
     n_local = sorted_ukeys.shape[0]
     lo = jnp.searchsorted(splitters, sorted_ukeys, side="left").astype(jnp.int32)
@@ -63,15 +84,18 @@ def _dest_shards(sorted_ukeys, splitters, axis_name: str):
     spread = hi - lo + 1
     first = jnp.searchsorted(sorted_ukeys, sorted_ukeys, side="left")
     tie_rank = jnp.arange(n_local, dtype=jnp.int32) - first.astype(jnp.int32)
-    dest = lo + (tie_rank + my) % spread
-    return dest, nshards
+    return lo + (tie_rank + my) % spread
 
 
 def _exchange(sorted_ukeys, dest_shard, nshards: int, capacity: int, sentinel,
-              axis_name: str):
+              axis_name: str, engine=None):
     """Partition by destination shard (one counting pass, §4.1), pad to the
-    static all_to_all capacity, exchange keys and validity counts."""
-    part = counting_partition(dest_shard, nshards)
+    static all_to_all capacity, exchange keys and validity counts.
+
+    The shard partition routes through the same engine-selected
+    ``counting_partition`` as MoE dispatch and length bucketing (core.plan).
+    """
+    part = counting_partition(dest_shard, nshards, engine=engine)
     position = part.dest - part.offsets[dest_shard]
     kept = position < capacity
     slot = jnp.where(kept, dest_shard * capacity + position, nshards * capacity)
@@ -90,7 +114,8 @@ def make_distributed_sort(mesh, axis_name: str = "data", *,
                           oversample: int = 64, slack: float = 2.0,
                           num_chunks: int = 1,
                           cfg: Optional[model.SortConfig] = None,
-                          spec: Optional[P] = None):
+                          spec: Optional[P] = None,
+                          engine: Optional[str] = None):
     """Build a shard_map'd distributed sort over one mesh axis.
 
     Returns fn: (n_local,) keys per shard -> (padded sorted keys per shard,
@@ -109,21 +134,22 @@ def make_distributed_sort(mesh, axis_name: str = "data", *,
         capacity = max(1, int(slack * chunk / nshards))
 
         # stage 1 (paper: on-GPU sort of each chunk): local hybrid sorts
-        pieces = [hybrid_sort(ukeys[c * chunk:(c + 1) * chunk], cfg=cfg)
+        pieces = [hybrid_sort(ukeys[c * chunk:(c + 1) * chunk], cfg=cfg,
+                              engine=engine)
                   for c in range(num_chunks)]
         # one consistent splitter set across all chunks
         m = max(1, min(nshards * oversample // num_chunks, chunk))
         stride = max(chunk // m, 1)
         sample = jnp.concatenate([p[::stride][:m] for p in pieces])
-        splitters = _make_splitters(sample, axis_name)
+        splitters = _make_splitters(sample, axis_name, nshards)
 
         # stage 2/3 (paper: pipelined transfer + merge): exchange chunk c+1
         # overlaps the merge of chunk c — no data dependency between them
         runs, counts, over = [], [], []
         for piece in pieces:
-            dest, _ = _dest_shards(piece, splitters, axis_name)
+            dest = _dest_shards(piece, splitters, axis_name, nshards)
             recv, cnt, ov = _exchange(piece, dest, nshards, capacity,
-                                      sentinel, axis_name)
+                                      sentinel, axis_name, engine=engine)
             # each received row is a sorted run (stable partition of sorted
             # input) -> multiway merge, not a re-sort
             runs.append(multiway_merge(recv))
@@ -135,5 +161,14 @@ def make_distributed_sort(mesh, axis_name: str = "data", *,
         out = bijection.from_ordered_bits(merged, keys.dtype)
         return out, valid.reshape(1), overflow.reshape(1)
 
-    return jax.shard_map(dsort, mesh=mesh, in_specs=(spec,),
-                         out_specs=(spec, spec, spec), check_vma=False)
+    return _shard_map(dsort, mesh, (spec,), (spec, spec, spec))
+
+
+def _shard_map(fn, mesh, in_specs, out_specs):
+    """jax.shard_map across jax versions (older ones: experimental module)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map
+    return shard_map(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                     check_rep=False)

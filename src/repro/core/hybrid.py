@@ -16,18 +16,18 @@ Algorithm (faithful to §4.1–§4.5):
     expressible under XLA's static shapes.
 
 Bucket state is carried *per key* (segment ids + done flags), which is the
-dense JAX analogue of the paper's block-assignment lists: monotone seg ids
-over positions encode exactly {b_id, b_offs}, and tile-aligned views of them
-drive the Pallas kernels' scalar prefetch.
+dense JAX analogue of the paper's block-assignment lists; ``core.plan`` owns
+every derived descriptor (active segments, block tables, merge bookkeeping,
+digit windows) so the three engines share one set of invariants.
 
-Three interchangeable engines compute each pass's permutation (byte-identical
-outputs, see ``core.ranks``):
+Three interchangeable engines compute each pass (byte-identical outputs):
 
-  * ``kernel``  — the paper's pipeline on Pallas kernels: block-assignment
-    descriptors (§4.2) feed one constant-size multisplit launch over all
-    active buckets (tile histogram → per-segment scan → coalesced run
-    copies, §4.3–§4.4), and done buckets finish through the padded
-    segmented bitonic local sort.  Zero comparison sorts in the traced HLO.
+  * ``kernel``  — ONE fused Pallas launch per pass (``kernels.fused``):
+    block-descriptor-driven tile partition + coalesced scatter of pass i
+    fused with the digit histogram of pass i+1 (§4.2–§4.4), on ping-pong
+    key/value buffers with donation.  Per pass the keys are read once and
+    written once; only the very first pass pays an extra histogram sweep.
+    Zero comparison sorts in the traced HLO.
   * ``argsort`` — two fused XLA stable sorts per pass; the CPU default.
   * ``scan``    — the O(n) chunked-histogram fallback from ``core.ranks``.
 """
@@ -40,10 +40,10 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core import bijection, model
-from repro.core.ranks import resolve_engine, stable_partition_dest
-from repro.kernels.ops import (apply_run_copies, segmented_kernel_pass,
-                               segmented_local_sort)
+from repro.core import bijection, model, plan
+from repro.core.ranks import stable_partition_dest
+from repro.kernels import fused
+from repro.kernels.ops import apply_run_copies, segmented_local_sort
 
 
 class SortStats(NamedTuple):
@@ -53,109 +53,73 @@ class SortStats(NamedTuple):
     max_segment: jnp.ndarray       # largest segment at exit
 
 
-def _digit_at(ukeys: jnp.ndarray, pass_idx, k: int, d: int) -> jnp.ndarray:
-    """MSD digit for pass ``pass_idx`` (0 = most significant); handles k % d != 0."""
-    udt = ukeys.dtype
-    hi = k - pass_idx * d
-    width = jnp.minimum(d, hi)
-    lo = (hi - width).astype(udt)
-    mask = ((jnp.array(1, udt) << width.astype(udt)) - 1).astype(udt)
-    return ((ukeys >> lo) & mask).astype(jnp.int32)
-
-
-def _merge_rows(hist: jnp.ndarray, local_threshold: int, merge_threshold: int):
-    """Apply R3 to each active bucket's sub-bucket size row.
-
-    Returns (group_start, group_done): (A, r) bools — whether sub-bucket v
-    starts a new (merged) bucket, and whether that bucket is finished (<= ∂̂).
-    """
-    def row(s_row):
-        def step(carry, s):
-            acc, gid = carry
-            big = s > local_threshold
-            extend = (s == 0) | ((~big) & (acc + s < merge_threshold))
-            ngid = jnp.where(extend, gid, gid + 1)
-            nacc = jnp.where(extend, acc + s,
-                             jnp.where(big, merge_threshold, s))
-            return (nacc, ngid), (~extend, ~big)
-        (_, _), (gstart, gdone) = lax.scan(
-            step, (jnp.int32(merge_threshold), jnp.int32(0)), s_row)
-        return gstart, gdone
-    return jax.vmap(row)(hist)
-
-
-def _counting_pass(ukeys, vals, seg_id, done, pass_idx, *, k, d, a_max, g_max,
-                   cfg, engine, interpret):
-    """One counting-sort pass over all active buckets simultaneously."""
+def _counting_pass_jnp(ukeys, vals, seg_id, done, pass_idx, *, k, d, a_max,
+                       cfg, engine):
+    """One counting pass, jnp engines: XLA stable sorts or the scan ranks."""
     n = ukeys.shape[0]
     r = 1 << d
     active = ~done
-    boundary = jnp.concatenate([jnp.ones((1,), bool),
-                                seg_id[1:] != seg_id[:-1]])
-    astart = boundary & active
-    asid = jnp.cumsum(astart.astype(jnp.int32)) - 1          # active-segment index
-    active_base = jnp.nonzero(astart, size=a_max, fill_value=n)[0].astype(jnp.int32)
+    asegs = plan.active_segments(seg_id, done, a_max)
+    asid = asegs.index
 
-    if engine == "kernel":
-        # Pre-shift so the kernels extract the pass's digit at a *static*
-        # position (low d bits).  On a partial-width last pass the extra high
-        # bits are the bucket's shared, already-processed prefix — constant
-        # within every segment, so the partition and the (column-shifted)
-        # merge bookkeeping are unchanged.
-        udt = ukeys.dtype
-        hi = k - pass_idx * d
-        lo = jnp.maximum(hi - d, 0).astype(udt)
-        shifted = ukeys >> lo
-        digit = (shifted & jnp.array(r - 1, udt)).astype(jnp.int32)
-        asize = jnp.zeros((a_max,), jnp.int32).at[
-            jnp.where(active, asid, a_max)].add(1, mode="drop")
-        src, dst, hist = segmented_kernel_pass(
-            shifted, active_base, asize, d, cfg.kpb, g_max,
-            interpret=interpret)
-    else:
-        digit = _digit_at(ukeys, pass_idx, k, d)
-        # (a, digit) histogram — only active keys contribute (M2 of the model)
-        idx = jnp.where(active, asid * r + digit, 0)
-        hist = jnp.zeros((a_max * r,), jnp.int32).at[idx].add(
-            active.astype(jnp.int32)).reshape(a_max, r)
+    digit = plan.digit_at(ukeys, pass_idx, k, d)
+    # (a, digit) histogram — only active keys contribute (M2 of the model)
+    idx = jnp.where(active, asid * r + digit, 0)
+    hist = jnp.zeros((a_max * r,), jnp.int32).at[idx].add(
+        active.astype(jnp.int32)).reshape(a_max, r)
 
-        # destination permutation: stable partition by (active segment, digit);
-        # done keys carry a +inf-like composite and stay in place.
-        sentinel = jnp.int32(a_max * r)
-        composite = jnp.where(active, asid * r + digit, sentinel)
-        dest0 = stable_partition_dest(composite, a_max * r + 1, engine=engine)
-        done_rank = stable_partition_dest(done.astype(jnp.int32), 2,
-                                          engine=engine)
-        slots = jnp.zeros((n,), jnp.int32).at[done_rank].set(
-            jnp.arange(n, dtype=jnp.int32))   # active slots asc, then done asc
-        dest = slots[dest0]
+    # destination permutation: stable partition by (active segment, digit);
+    # done keys carry a +inf-like composite and stay in place.
+    sentinel = jnp.int32(a_max * r)
+    composite = jnp.where(active, asid * r + digit, sentinel)
+    dest0 = stable_partition_dest(composite, a_max * r + 1, engine=engine)
+    done_rank = stable_partition_dest(done.astype(jnp.int32), 2,
+                                      engine=engine)
+    slots = jnp.zeros((n,), jnp.int32).at[done_rank].set(
+        jnp.arange(n, dtype=jnp.int32))   # active slots asc, then done asc
+    dest = slots[dest0]
 
-        new_keys = jnp.zeros_like(ukeys).at[dest].set(ukeys)
-        new_vals = jax.tree.map(lambda v: jnp.zeros_like(v).at[dest].set(v),
-                                vals)
+    new_keys = jnp.zeros_like(ukeys).at[dest].set(ukeys)
+    new_vals = jax.tree.map(lambda v: jnp.zeros_like(v).at[dest].set(v), vals)
 
     # bucket bookkeeping: merged-group starts (R3) become the new boundaries
-    gstart, gdone = _merge_rows(hist, cfg.local_threshold, cfg.merge_threshold)
+    gstart, gdone = plan.merge_rows(hist, cfg.local_threshold,
+                                    cfg.merge_threshold)
     excl = jnp.cumsum(hist, axis=1) - hist
-    dest_base = active_base[:, None] + excl                   # (a_max, r)
-
-    nb = jnp.zeros((n,), bool)
-    keep = boundary & done                                    # done buckets persist in place
-    nb = nb.at[jnp.where(keep, jnp.arange(n), n)].set(True, mode="drop")
-    nb = nb.at[jnp.where(gstart.reshape(-1), dest_base.reshape(-1), n)].set(True, mode="drop")
-    nb = nb.at[0].set(True)
-    new_seg = (jnp.cumsum(nb.astype(jnp.int32)) - 1)
-
-    key_gdone = gdone.reshape(-1)[jnp.where(active, asid * r + digit, 0)]
-    if engine == "kernel":
-        # run copies: done keys keep their slots, active slots are overwritten
-        new_keys, new_vals = apply_run_copies(src, dst, (ukeys, vals))
-        new_done = done.at[dst].set(key_gdone[jnp.clip(src, 0, n - 1)],
-                                    mode="drop")
-    else:
-        new_done = jnp.zeros((n,), bool).at[dest].set(
-            jnp.where(active, key_gdone, True))
+    dest_base = asegs.base[:, None] + excl                    # (a_max, r)
+    new_seg, new_done = plan.apply_pass_bookkeeping(
+        seg_id, done, asegs, hist, gstart, gdone, dest_base)
     return new_keys, new_vals, new_seg, new_done
+
+
+def _counting_pass_fused(state, *, k, d, a_max, g_max, n, cfg, interpret):
+    """One counting pass, kernel engine: a single fused Pallas launch.
+
+    ``state`` carries the ping-pong buffers, the dense bucket state and the
+    per-active-segment histogram of THIS pass's digit — fused out of the
+    previous pass's scatter (§4.3; the first pass's comes from the prologue
+    sweep).  The launch reads the keys once and writes them once.
+    """
+    ck, cv, ak, av, seg_id, done, seg_hist, p = state
+    r = 1 << d
+    asegs = plan.active_segments(seg_id, done, a_max)
+    gstart, gdone = plan.merge_rows(seg_hist, cfg.local_threshold,
+                                    cfg.merge_threshold)
+    excl = jnp.cumsum(seg_hist, axis=1) - seg_hist
+    dest_base = asegs.base[:, None] + excl                    # (a_max, r)
+    nsid = plan.next_active_table(seg_hist, cfg.local_threshold, a_max)
+    blocks = plan.make_region_blocks(asegs.base, asegs.size, n, cfg.kpb,
+                                     g_max)
+    sc = plan.digit_window(p, k, d)
+    nk, nv, hist_next = fused.fused_counting_pass(
+        ck, cv, ak, av, sc, *blocks, dest_base, nsid,
+        kpb=cfg.kpb, r=r, a_max=a_max, n=n, interpret=interpret)
+    new_seg, new_done = plan.apply_pass_bookkeeping(
+        seg_id, done, asegs, seg_hist, gstart, gdone, dest_base)
+    # flip: the freshly written buffers become current, the old ones the
+    # donation targets of the next pass
+    return (nk, nv, ck, cv, new_seg, new_done,
+            hist_next.reshape(a_max, r), p + 1)
 
 
 def _local_sort(ukeys, vals, seg_id, done):
@@ -208,28 +172,50 @@ def _hybrid_sort_bits(ukeys, vals, cfg: model.SortConfig, k: int,
                       engine: str = "argsort", interpret: bool = True):
     n = ukeys.shape[0]
     d = cfg.d
+    r = 1 << d
     nd = model.num_digits(k, d)
     if max_passes is not None:
         nd = min(nd, max_passes)
     a_max = model.max_active_buckets(n, cfg)
-    g_max = model.max_blocks(n, cfg)
 
     done0 = jnp.full((n,), n <= cfg.local_threshold)
     seg0 = jnp.zeros((n,), jnp.int32)
 
-    def cond(state):
-        _, _, _, done, p = state
-        return (p < nd) & jnp.any(~done)
+    if engine == "kernel":
+        g_max = plan.max_region_blocks(n, cfg.kpb, a_max)
+        leaves, treedef = jax.tree.flatten(vals)
+        (ck, cv), (ak, av) = fused.make_ping_pong(ukeys, leaves, cfg.kpb)
+        # the one unfused sweep of the sort: pass 0's histogram (§4.3)
+        w0 = min(d, k)
+        seg_hist0 = fused.initial_histogram(ck, n, k - w0, w0, r, a_max,
+                                            cfg.kpb, interpret=interpret)
 
-    def body(state):
-        ukeys, vals, seg, done, p = state
-        ukeys, vals, seg, done = _counting_pass(
-            ukeys, vals, seg, done, p, k=k, d=d, a_max=a_max, g_max=g_max,
-            cfg=cfg, engine=engine, interpret=interpret)
-        return ukeys, vals, seg, done, p + 1
+        def cond(state):
+            _, _, _, _, _, done, _, p = state
+            return (p < nd) & jnp.any(~done)
 
-    ukeys, vals, seg, done, p = lax.while_loop(
-        cond, body, (ukeys, vals, seg0, done0, jnp.int32(0)))
+        body = functools.partial(_counting_pass_fused, k=k, d=d, a_max=a_max,
+                                 g_max=g_max, n=n, cfg=cfg,
+                                 interpret=interpret)
+        ck, cv, ak, av, seg, done, _, p = lax.while_loop(
+            cond, body, (ck, cv, ak, av, seg0, done0, seg_hist0,
+                         jnp.int32(0)))
+        ukeys = ck[:n]
+        vals = jax.tree.unflatten(treedef, [v[:n] for v in cv])
+    else:
+        def cond(state):
+            _, _, _, done, p = state
+            return (p < nd) & jnp.any(~done)
+
+        def body(state):
+            ukeys, vals, seg, done, p = state
+            ukeys, vals, seg, done = _counting_pass_jnp(
+                ukeys, vals, seg, done, p, k=k, d=d, a_max=a_max, cfg=cfg,
+                engine=engine)
+            return ukeys, vals, seg, done, p + 1
+
+        ukeys, vals, seg, done, p = lax.while_loop(
+            cond, body, (ukeys, vals, seg0, done0, jnp.int32(0)))
 
     needs_local = jnp.any(done)
     if engine == "kernel":
@@ -260,14 +246,18 @@ def hybrid_sort(keys: jnp.ndarray, values: Any = None,
     keys (decomposed key-value layout, §4.6).  Pair movement is consistent but
     — by the paper's central design choice — NOT stable across equal keys.
 
-    ``engine`` selects the per-pass partition engine: ``"kernel"`` (the Pallas
-    counting-pass pipeline — histogram, multisplit, run copies — plus the
-    bitonic local sort), ``"argsort"`` (fused XLA stable sorts), or ``"scan"``
-    (the O(n) chunked jnp fallback).  ``None`` defers to ``cfg.rank_engine``
-    (``"auto"`` by default), and ``"auto"`` picks the backend default:
-    ``kernel`` on TPU, ``argsort`` elsewhere.  All engines produce
-    byte-identical output.  ``interpret`` forces Pallas interpret mode (on by
-    default off-TPU).
+    ``engine`` selects the per-pass partition engine: ``"kernel"`` (ONE fused
+    Pallas launch per counting pass — partition + scatter + next-pass
+    histogram on donated ping-pong buffers — plus the bitonic local sort),
+    ``"argsort"`` (fused XLA stable sorts), or ``"scan"`` (the O(n) chunked
+    jnp fallback).  ``None`` defers to ``cfg.rank_engine`` (``"auto"`` by
+    default); ``"auto"`` resolves per backend with the hardware demotion
+    rule of ``core.plan.resolve_pass_engine`` — the fused ``kernel`` engine
+    wherever Pallas runs in interpret mode, ``argsort`` on compiled
+    hardware until the fused kernel's Mosaic lowering lands (an explicit
+    ``engine="kernel"`` is always honoured).  All engines produce
+    byte-identical output.  ``interpret`` forces Pallas interpret mode (on
+    by default off-TPU).
 
     Returns ``sorted_keys``, or ``(sorted_keys, permuted_values)`` if values
     were given; append ``stats`` when ``return_stats``.
@@ -280,8 +270,10 @@ def hybrid_sort(keys: jnp.ndarray, values: Any = None,
     if k > 32 and not jax.config.jax_enable_x64:
         raise RuntimeError("64-bit keys require jax_enable_x64")
     cfg = cfg or model.default_config(k // 8)
-    # explicit argument > cfg.rank_engine > backend default
-    engine = resolve_engine(engine if engine is not None else cfg.rank_engine)
+    # explicit argument > cfg.rank_engine > backend default (with the
+    # interpret-only demotion of auto-resolved "kernel", see core.plan)
+    engine = plan.resolve_pass_engine(
+        engine if engine is not None else cfg.rank_engine, interpret)
     n = keys.shape[0]
     if n == 0:
         out = (keys, values) if values is not None else keys

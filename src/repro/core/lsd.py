@@ -3,13 +3,15 @@
 State-of-the-art GPU radix sorts are least-significant-digit-first with d = 4
 or 5 bits per *stable* pass (CUB 1.5.1: d=5; CUB 1.6.4 appendix: up to d=7).
 This module is the measured baseline the hybrid sort is compared against: the
-pass structure (⌈k/d⌉ stable counting passes, each reading the input twice and
-writing once) is what produces the paper's 1.6–1.75x traffic ratio.
+pass structure (⌈k/d⌉ stable counting passes) is what produces the paper's
+1.6–1.75x traffic ratio.
 
 ``lsd_sort`` routes through the same engine selector as ``hybrid_sort``:
-``argsort``/``scan`` compute each pass's permutation in jnp, ``kernel`` runs
-the Pallas tile-multisplit pipeline (shifts are static here, so the passes
-unroll and feed the kernels directly).
+``argsort``/``scan`` compute each pass's permutation in jnp; ``kernel`` runs
+ONE fused Pallas launch per pass (``kernels.fused``) over donated ping-pong
+buffers, with each pass's digit histogram fused out of the previous pass's
+scatter (§4.3) — so the kernel engine reads the keys once and writes them
+once per pass, plus a single prologue histogram sweep for pass 0.
 """
 from __future__ import annotations
 
@@ -20,9 +22,9 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core import bijection, model
-from repro.core.ranks import resolve_engine, stable_partition_dest
-from repro.kernels.ops import apply_run_copies, kernel_pass_perm
+from repro.core import bijection, model, plan
+from repro.core.ranks import stable_partition_dest
+from repro.kernels import fused
 
 
 @functools.partial(jax.jit, static_argnames=("d", "k", "engine", "kpb",
@@ -31,17 +33,32 @@ def _lsd_sort_bits(ukeys, vals, d: int, k: int, engine: str, kpb: int,
                    interpret: bool):
     nd = model.num_digits(k, d)
     udt = ukeys.dtype
+    n = ukeys.shape[0]
 
     if engine == "kernel":
-        # LSD shifts are compile-time constants, so the pass loop unrolls and
-        # each pass is one multisplit launch + run copies (src/dst pairs).
+        # LSD is the degenerate plan: one always-active segment covering
+        # [0, n), no merging, ⌈k/d⌉ statically unrolled fused launches.
+        r = 1 << d
+        leaves, treedef = jax.tree.flatten(vals)
+        (ck, cv), (ak, av) = fused.make_ping_pong(ukeys, leaves, kpb)
+        base = jnp.zeros((1,), jnp.int32)
+        size = jnp.full((1,), n, jnp.int32)
+        blocks = plan.make_region_blocks(base, size, n, kpb,
+                                         plan.max_region_blocks(n, kpb, 1))
+        nsid = jnp.zeros((r,), jnp.int32)     # every sub-bucket -> segment 0
+        w0 = min(d, k)
+        seg_hist = fused.initial_histogram(ck, n, 0, w0, r, 1, kpb,
+                                           interpret=interpret)
         for p in range(nd):
-            shift = p * d
-            width = min(d, k - shift)  # partial top digit on the last pass
-            src, dst = kernel_pass_perm(ukeys, shift, width, k, kpb=kpb,
-                                        interpret=interpret)
-            ukeys, vals = apply_run_copies(src, dst, (ukeys, vals))
-        return ukeys, vals
+            base_excl = jnp.cumsum(seg_hist, axis=1) - seg_hist
+            sc = plan.lsd_digit_window(p, k, d)
+            nk, nv, hist_next = fused.fused_counting_pass(
+                ck, cv, ak, av, sc, *blocks, base_excl, nsid,
+                kpb=kpb, r=r, a_max=1, n=n, interpret=interpret)
+            # flip: written buffers become current, old ones donate next
+            ak, av, ck, cv = ck, cv, nk, nv
+            seg_hist = hist_next.reshape(1, r)
+        return ck[:n], jax.tree.unflatten(treedef, [v[:n] for v in cv])
 
     def body(p, state):
         ukeys, vals = state
@@ -69,9 +86,10 @@ def lsd_sort(keys: jnp.ndarray, values: Any = None, d: int = 5,
     """
     if keys.ndim != 1:
         raise ValueError("lsd_sort expects a 1-D key array")
-    engine = resolve_engine(engine)
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
+    # auto-resolved "kernel" engages under interpret mode only (core.plan)
+    engine = plan.resolve_pass_engine(engine, interpret)
     k = bijection.key_bits(keys.dtype)
     if keys.shape[0] == 0:
         return keys if values is None else (keys, values)

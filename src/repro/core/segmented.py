@@ -1,20 +1,25 @@
 """Counting-sort partitioning primitives reused across the framework.
 
 ``counting_partition`` is one hybrid-radix counting pass (paper §4.1 steps
-1–3) exposed as a standalone op.  It is the core of:
+1–3) exposed as a standalone op — a thin client of
+``core.plan.single_pass_partition``, the engine-selected implementation every
+layer shares.  It is the core of:
 
   * MoE token dispatch (group tokens expert-major; E <= 2^d ⇒ exactly one pass),
   * data-pipeline length bucketing,
   * the shard-partitioning step of the distributed sort (§5).
+
+``engine=None`` resolves exactly like the sort drivers
+(``core.plan.resolve_pass_engine``: the fused Pallas ``kernel`` launch
+wherever Pallas interprets, ``argsort`` on compiled hardware).
 """
 from __future__ import annotations
 
 from typing import NamedTuple, Optional
 
-import jax
 import jax.numpy as jnp
 
-from repro.core.ranks import stable_partition_dest, invert_permutation
+from repro.core import plan
 
 
 class Partition(NamedTuple):
@@ -25,12 +30,11 @@ class Partition(NamedTuple):
 
 
 def counting_partition(bucket_ids: jnp.ndarray, num_buckets: int,
-                       engine: str = "argsort") -> Partition:
+                       engine: Optional[str] = None,
+                       interpret: Optional[bool] = None) -> Partition:
     """Stable partition of elements by ``bucket_ids`` (one counting pass)."""
-    ids = bucket_ids.astype(jnp.int32)
-    dest = stable_partition_dest(ids, num_buckets, engine=engine)
-    perm = invert_permutation(dest)
-    counts = jnp.bincount(ids, length=num_buckets).astype(jnp.int32)
+    dest, perm, counts = plan.single_pass_partition(
+        bucket_ids, num_buckets, engine=engine, interpret=interpret)
     offsets = (jnp.cumsum(counts) - counts).astype(jnp.int32)
     return Partition(dest=dest, perm=perm, counts=counts, offsets=offsets)
 
@@ -45,7 +49,7 @@ class CapacityDispatch(NamedTuple):
 
 
 def capacity_dispatch(bucket_ids: jnp.ndarray, num_buckets: int, capacity: int,
-                      engine: str = "argsort") -> CapacityDispatch:
+                      engine: Optional[str] = None) -> CapacityDispatch:
     """Counting-sort dispatch into a dense (buckets, capacity) layout.
 
     This is the paper's scatter step with the destination chunk *reserved* per

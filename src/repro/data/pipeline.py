@@ -5,9 +5,11 @@ of (seed, t), so resuming from a checkpoint at step t replays the identical
 stream with no pipeline state to persist — counter-based PRNG keys, the same
 pattern large-scale deterministic loaders use.
 
-Length bucketing uses the hybrid radix sort (16-bit lengths = two d=8 counting
-passes) to order documents by length before packing — the data-pipeline
-integration point of the paper's technique.
+Length bucketing runs explicit d=8 counting passes through
+``core.segmented.counting_partition`` — the same engine-selected partition
+primitive as MoE dispatch and the distributed sort's shard step
+(``core.plan.single_pass_partition``; fused Pallas kernel under interpret
+mode, XLA stable sort on compiled hardware until the Mosaic lowering lands).
 """
 from __future__ import annotations
 
@@ -18,7 +20,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core.hybrid import hybrid_sort
+from repro.core.segmented import counting_partition
 
 
 @dataclasses.dataclass
@@ -53,18 +55,29 @@ class SyntheticLMData:
             step += 1
 
 
-def length_bucketed_batches(lengths: np.ndarray, batch_tokens: int):
-    """Order documents by length with the hybrid sort, then greedily pack.
+def length_bucketed_batches(lengths: np.ndarray, batch_tokens: int,
+                            engine: Optional[str] = None):
+    """Order documents by length via two LSD counting passes, then pack.
 
-    Returns (order, bucket_bounds): ``order`` is the sorted document order
+    The ordering is an explicit LSD radix sort on the shared engine-selected
+    partition primitive: chained d=8 ``counting_partition`` passes, one per
+    occupied length byte (typical 16-bit lengths: two passes).  Returns
+    (order, bucket_bounds): ``order`` is the sorted document order
     (longest-with-longest minimises padding waste), bounds delimit batches of
     at most ``batch_tokens`` padded tokens.
     """
     lengths = np.asarray(lengths, np.uint32)
-    doc_ids = jnp.arange(lengths.shape[0], dtype=jnp.int32)
-    sorted_len, order = hybrid_sort(jnp.asarray(lengths), doc_ids)
-    sorted_len = np.asarray(sorted_len)
-    order = np.asarray(order)
+    # host-side: only as many passes as the longest document needs
+    max_len = int(lengths.max()) if lengths.size else 0
+    npasses = max(1, (max_len.bit_length() + 7) // 8)
+    x = lengths.copy()
+    order = np.arange(lengths.shape[0], dtype=np.int32)
+    for p in range(npasses):      # stable LSD, least-significant byte first
+        ids = jnp.asarray(((x >> (8 * p)) & 0xFF).astype(np.int32))
+        perm = np.asarray(counting_partition(ids, 256, engine=engine).perm)
+        x = x[perm]
+        order = order[perm]
+    sorted_len = x
 
     bounds = [0]
     cur_max = 0

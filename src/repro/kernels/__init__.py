@@ -1,28 +1,47 @@
 """Pallas TPU kernels for the hybrid radix sort's compute hot spots.
 
+fused       — ONE launch per counting pass: block-descriptor partition +
+              coalesced scatter of pass i fused with the digit histogram of
+              pass i+1, on donated ping-pong buffers (§4.2–§4.4)
 histogram   — one-hot MXU contraction histogram (§4.3's atomics, TPU-native)
-multisplit  — in-VMEM tile partition + write combining (§4.4 / Fig. 3)
+multisplit  — in-VMEM tile partition + write combining (§4.4 / Fig. 3); the
+              fused pass's per-block partition math, kept as the standalone
+              per-tile kernel and oracle
 bitonic     — VMEM local sort (§4.1's local sort; CUB BlockRadixSort analogue)
-assigned    — scalar-prefetch block descriptors (§4.2 constant-invocation trick)
-ops         — jit'd composition into full counting passes (the sort's engine)
+assigned    — the scalar-prefetch launch exemplar (§4.2 constant-invocation
+              trick; descriptor *generation* lives in core.plan)
+ops         — local-sort / histogram drivers (the fused counting passes moved
+              to ``fused``; the per-bucket multi-launch drivers are retired)
 ref         — pure-jnp oracles
+
+Memory-transfer accounting (paper §4.3–§4.4, the roofline target for
+BENCH_hybrid.json): one *unfused* counting pass over n keys of b bytes moves
+``2R + 1W`` key sweeps (histogram read + scatter read + scatter write) =
+3·n·b bytes; values add ``1R + 1W`` = 2·n·v.  The fused pass moves
+``1R + 1W`` = 2·n·b (+ 2·n·v) because pass i+1's histogram is computed while
+pass i's scatter still holds the keys — a 1.5x per-pass key-traffic
+reduction, and the whole sort pays exactly one extra 1R prologue sweep
+(pass 0's histogram).  A full k-bit hybrid sort therefore moves at most
+``(2·⌈k/d⌉ + 1)·n·b`` key bytes versus ``3·⌈k/d⌉·n·b`` unfused and versus
+``3·⌈k/5⌉·n·b`` for the CUB-style LSD baseline — the paper's 1.6–1.75x
+traffic headline.  Bookkeeping arrays (M2–M5 of §4.5) are O(n/∂̂ · r) and do
+not change the leading term.
 """
 from repro.kernels.histogram import radix_histogram
 from repro.kernels.multisplit import tile_multisplit, tile_multisplit_kv
 from repro.kernels.bitonic import (bitonic_sort_rows, bitonic_sort_rows_kv,
                                    bitonic_sort_rows_stable)
-from repro.kernels.assigned import (assigned_histogram, BlockAssignment,
-                                    make_block_assignments)
-from repro.kernels.ops import (kernel_counting_pass, kernel_counting_pass_kv,
-                               kernel_pass_perm, kernel_local_sort,
-                               segmented_kernel_pass, segmented_local_sort,
-                               tile_histogram_pass)
+from repro.kernels.assigned import assigned_histogram
+from repro.kernels.fused import (fused_counting_pass, initial_histogram,
+                                 make_ping_pong, pad_length)
+from repro.kernels.ops import (apply_run_copies, kernel_local_sort,
+                               segmented_local_sort, tile_histogram_pass)
 
 __all__ = [
     "radix_histogram", "tile_multisplit", "tile_multisplit_kv",
     "bitonic_sort_rows", "bitonic_sort_rows_kv", "bitonic_sort_rows_stable",
-    "assigned_histogram", "BlockAssignment", "make_block_assignments",
-    "kernel_counting_pass", "kernel_counting_pass_kv", "kernel_pass_perm",
-    "kernel_local_sort", "segmented_kernel_pass", "segmented_local_sort",
+    "assigned_histogram",
+    "fused_counting_pass", "initial_histogram", "make_ping_pong", "pad_length",
+    "apply_run_copies", "kernel_local_sort", "segmented_local_sort",
     "tile_histogram_pass",
 ]

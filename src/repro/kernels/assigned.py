@@ -7,69 +7,20 @@ analogue is Pallas' scalar prefetch: the grid is the static block upper bound
 (model I4) and the BlockSpec ``index_map`` *reads the assignment table* to
 decide which input tile each grid step processes — data-dependent work
 assignment with a single compiled kernel.
+
+The general block-descriptor *generation* (segments plus done gaps, carry
+resets, copy-through flags) lives in ``core.plan.make_region_blocks``, which
+feeds ``kernels.fused`` — this module keeps the scalar-prefetch launch
+pattern itself as the minimal tested exemplar.
 """
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
-
-
-class BlockAssignment(NamedTuple):
-    """The paper's per-block descriptor table (M4), statically sized by I4.
-
-    One row per grid step g of the constant-size kernel launch:
-      seg_idx     — which (active) segment block g belongs to; ``a_max`` when
-                    g is beyond the pass's real block count,
-      key_offset  — absolute offset of the block's first key (the paper's
-                    k_offs; b_offs is recovered as seg_base[seg_idx]),
-      blk_in_seg  — block index within its segment (drives the in-segment
-                    histogram carry),
-      first_block — g-index of the segment's first block,
-      valid       — bool, False on the static-bound padding rows.
-    """
-    seg_idx: jnp.ndarray
-    key_offset: jnp.ndarray
-    blk_in_seg: jnp.ndarray
-    first_block: jnp.ndarray
-    valid: jnp.ndarray
-
-
-def make_block_assignments(seg_base: jnp.ndarray, seg_size: jnp.ndarray,
-                           kpb: int, g_max: int) -> BlockAssignment:
-    """Generate block descriptors for all segments at once (§4.2).
-
-    ``seg_base``/``seg_size`` are (A,) int32 starts and lengths; segments may
-    be empty (size 0 rows of the static table get no blocks).  Segment i
-    contributes ceil(seg_size[i] / kpb) consecutive blocks; ``g_max`` is the
-    static upper bound (model I4: n // kpb + max_active + 1).
-    """
-    a_max = seg_base.shape[0]
-    nblk = (seg_size + kpb - 1) // kpb                       # (A,) blocks per seg
-    blk_excl = jnp.cumsum(nblk) - nblk                       # first block of seg
-    total = blk_excl[-1] + nblk[-1]
-
-    # ownership via marks + prefix sum: mark each non-empty segment's first
-    # block, count marks up to g, and map the count back through the list of
-    # non-empty segments (empty rows never own a block).
-    marks = jnp.zeros((g_max,), jnp.int32).at[
-        jnp.where(nblk > 0, blk_excl, g_max)].add(1, mode="drop")
-    seg_ord = jnp.cumsum(marks) - 1                          # rank among non-empty
-    nonempty = jnp.nonzero(nblk > 0, size=a_max, fill_value=a_max)[0]
-    g = jnp.arange(g_max, dtype=jnp.int32)
-    valid = g < total
-    seg_idx = jnp.where(
-        valid, nonempty[jnp.clip(seg_ord, 0, a_max - 1)], a_max).astype(jnp.int32)
-    seg_safe = jnp.clip(seg_idx, 0, a_max - 1)
-    first_block = blk_excl[seg_safe].astype(jnp.int32)
-    blk_in_seg = jnp.where(valid, g - first_block, 0)
-    key_offset = jnp.where(valid, seg_base[seg_safe] + blk_in_seg * kpb, 0)
-    return BlockAssignment(seg_idx, key_offset.astype(jnp.int32),
-                           blk_in_seg.astype(jnp.int32), first_block, valid)
 
 
 def _assigned_hist_kernel(tile_idx_ref, valid_ref, keys_ref, hist_ref, *,

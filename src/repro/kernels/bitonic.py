@@ -103,18 +103,44 @@ def _bitonic_kv_kernel(keys_ref, vals_ref, out_k_ref, out_v_ref):
     out_v_ref[...] = v
 
 
+# rows per grid step: the network is batch-agnostic, so each VMEM block holds
+# as many rows as fit a ~4 MiB element budget — small-L launches stop paying
+# one grid step per tiny row (dominant for the local sort's padded tables)
+_ROW_BATCH_ELEMS = 1 << 20
+
+
+def _row_batch(s: int, l: int) -> int:
+    return max(1, min(s, _ROW_BATCH_ELEMS // max(l, 1)))
+
+
+def _rows_call(kernel, arrs, out_dtypes, interpret: bool):
+    """Launch a row-batched bitonic kernel over (S, L) operand rows."""
+    s, l = arrs[0].shape
+    rb = _row_batch(s, l)
+    pad = (-s) % rb
+    if pad:
+        arrs = [jnp.concatenate([a, a[-1:].repeat(pad, axis=0)]) for a in arrs]
+    sp = s + pad
+    spec = pl.BlockSpec((rb, l), lambda i: (i, 0))
+    out = pl.pallas_call(
+        kernel,
+        grid=(sp // rb,),
+        in_specs=[spec] * len(arrs),
+        out_specs=[spec] * len(out_dtypes) if len(out_dtypes) > 1 else spec,
+        out_shape=([jax.ShapeDtypeStruct((sp, l), dt) for dt in out_dtypes]
+                   if len(out_dtypes) > 1
+                   else jax.ShapeDtypeStruct((sp, l), out_dtypes[0])),
+        interpret=interpret,
+    )(*arrs)
+    outs = out if isinstance(out, (tuple, list)) else (out,)
+    outs = tuple(o[:s] for o in outs)
+    return outs if len(outs) > 1 else outs[0]
+
+
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def bitonic_sort_rows(keys: jnp.ndarray, interpret: bool = True) -> jnp.ndarray:
     """Sort each row of (S, L) ascending; L must be a power of two."""
-    s, l = keys.shape
-    return pl.pallas_call(
-        _bitonic_kernel,
-        grid=(s,),
-        in_specs=[pl.BlockSpec((1, l), lambda i: (i, 0))],
-        out_specs=pl.BlockSpec((1, l), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((s, l), keys.dtype),
-        interpret=interpret,
-    )(keys)
+    return _rows_call(_bitonic_kernel, [keys], [keys.dtype], interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
@@ -127,18 +153,8 @@ def bitonic_sort_rows_stable(keys: jnp.ndarray, idx: jnp.ndarray,
     collisions — the segmented local-sort path of the hybrid sort's kernel
     engine relies on both properties.
     """
-    s, l = keys.shape
-    return pl.pallas_call(
-        _bitonic_stable_kernel,
-        grid=(s,),
-        in_specs=[pl.BlockSpec((1, l), lambda i: (i, 0)),
-                  pl.BlockSpec((1, l), lambda i: (i, 0))],
-        out_specs=[pl.BlockSpec((1, l), lambda i: (i, 0)),
-                   pl.BlockSpec((1, l), lambda i: (i, 0))],
-        out_shape=[jax.ShapeDtypeStruct((s, l), keys.dtype),
-                   jax.ShapeDtypeStruct((s, l), idx.dtype)],
-        interpret=interpret,
-    )(keys, idx)
+    return _rows_call(_bitonic_stable_kernel, [keys, idx],
+                      [keys.dtype, idx.dtype], interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
@@ -149,15 +165,5 @@ def bitonic_sort_rows_kv(keys: jnp.ndarray, vals: jnp.ndarray,
     NOTE: with duplicate keys the value attribution is resolved by move-mask,
     which matches the paper's non-stable pair semantics.
     """
-    s, l = keys.shape
-    return pl.pallas_call(
-        _bitonic_kv_kernel,
-        grid=(s,),
-        in_specs=[pl.BlockSpec((1, l), lambda i: (i, 0)),
-                  pl.BlockSpec((1, l), lambda i: (i, 0))],
-        out_specs=[pl.BlockSpec((1, l), lambda i: (i, 0)),
-                   pl.BlockSpec((1, l), lambda i: (i, 0))],
-        out_shape=[jax.ShapeDtypeStruct((s, l), keys.dtype),
-                   jax.ShapeDtypeStruct((s, l), vals.dtype)],
-        interpret=interpret,
-    )(keys, vals)
+    return _rows_call(_bitonic_kv_kernel, [keys, vals],
+                      [keys.dtype, vals.dtype], interpret)

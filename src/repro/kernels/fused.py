@@ -1,0 +1,260 @@
+"""Pallas TPU kernel: one fused launch per counting pass (§4.3–§4.4).
+
+The paper's headline traffic reduction comes from *fusing* the three steps of
+a counting pass — and the first step of the next pass — into one kernel:
+
+  * §4.3: the scatter of pass i computes the digit histogram of pass i+1 on
+    the keys it is already holding in registers/VMEM, so every pass after the
+    first reads the keys ONCE (scatter) instead of twice (histogram +
+    scatter): per-pass traffic drops from 2R+1W to 1R+1W key-array sweeps,
+  * §4.4: keys are partitioned digit-major inside VMEM first, so the HBM
+    writes are per-digit contiguous runs (write combining for any skew),
+  * §4.2: the launch has a *constant* grid; each grid step reads its block
+    descriptor (which segment, which offset, how many live lanes) from
+    scalar-prefetched tables, so one compiled kernel serves every
+    data-dependent set of active buckets.
+
+``fused_counting_pass`` is that launch.  One call per pass:
+
+  grid step g (sequential on TPU, so in-segment carries live in an
+  accumulator):
+    1. load the assigned KPB-block of keys (+ value slabs) from the *current*
+       ping-pong buffer at a dynamic offset,
+    2. extract the pass digit at a scalar-prefetched (lo, width) window —
+       no pre-shifted key copies,
+    3. one-hot cumulative counts give each key its stable in-block rank and
+       the block histogram (the paper's shared-memory write counters),
+    4. destination = segment base + in-segment digit offset (prefetched,
+       from the histogram *fused out of the previous pass*) + carried
+       in-segment block offset + rank; done-bucket gap blocks copy through
+       at their own offsets,
+    5. scatter keys and values into the *alternate* ping-pong buffer
+       (``input_output_aliases`` donates it, §4.4's in-place replacement),
+    6. fuse pass i+1: extract the next digit window and accumulate the
+       per-next-active-segment histogram (§4.3) into an accumulator output.
+
+The jnp drivers in ``repro.core`` compute identical permutations and serve as
+oracles; ``repro.core.plan`` builds the descriptor tables.  On this CPU
+container the kernel runs in interpret mode; on real hardware the dynamic
+per-lane scatter of step 5 is realised as the r coalesced run copies of §4.4
+(one static-size masked store per digit run) and the tables live in SMEM.
+
+Memory-transfer accounting per pass over n keys (k-bit, v-bit values):
+  unfused (histogram launch + scatter launch):  keys 2R+1W, values 1R+1W
+  fused   (this kernel):                        keys 1R+1W, values 1R+1W
+plus one extra 1R histogram sweep for the very first pass (the prologue,
+``initial_histogram``) — exactly the paper's accounting in §4.3/Table 2.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.histogram import radix_histogram
+
+
+def pad_length(n: int, kpb: int) -> int:
+    """Padded ping-pong buffer length: whole KPB tiles plus one spare tile.
+
+    The spare tile guarantees every dynamic block load ``[off, off + kpb)``
+    with ``off <= n - 1`` stays in bounds, and slot ``n`` doubles as the
+    in-bounds trash destination for masked lanes (no reliance on
+    out-of-bounds scatter semantics).
+    """
+    return n + ((-n) % kpb) + kpb
+
+
+def make_ping_pong(keys: jnp.ndarray, val_leaves, kpb: int):
+    """Pad keys + value leaves into (current, alternate) ping-pong buffers.
+
+    Key padding is the all-ones sentinel so the prologue histogram can
+    subtract it from the top digit bucket; value padding is zeros.  Returns
+    ``(cur_keys, cur_vals), (alt_keys, alt_vals)`` with ``vals`` as tuples.
+    """
+    n = keys.shape[0]
+    n_pad = pad_length(n, kpb)
+    sentinel = ~jnp.zeros((), keys.dtype)
+    ck = jnp.concatenate([keys, jnp.full((n_pad - n,), sentinel, keys.dtype)])
+    cv = tuple(
+        jnp.concatenate([v, jnp.zeros((n_pad - n,) + v.shape[1:], v.dtype)])
+        for v in val_leaves)
+    ak = jnp.full_like(ck, sentinel)
+    av = tuple(jnp.zeros_like(v) for v in cv)
+    return (ck, cv), (ak, av)
+
+
+def initial_histogram(buf_keys: jnp.ndarray, n: int, lo: int, width: int,
+                      r: int, a_max: int, kpb: int,
+                      interpret: bool = True) -> jnp.ndarray:
+    """Histogram of the first pass's digit over the single segment [0, n).
+
+    This is the one unfused key sweep of the whole sort (§4.3: pass 0 has no
+    previous scatter to fuse with).  ``buf_keys`` is a sentinel-padded
+    ping-pong buffer from ``make_ping_pong``; the sentinels extract the
+    all-ones digit and are subtracted from the top bucket.  Returns the
+    (a_max, r) per-active-segment histogram table with row 0 populated.
+    """
+    r0 = 1 << width
+    tiles = buf_keys.reshape(-1, kpb)
+    hist = radix_histogram(tiles, lo, width, interpret=interpret).sum(
+        axis=0, dtype=jnp.int32)   # pinned: x64 would widen the accumulator
+    hist = hist.at[r0 - 1].add(-(buf_keys.shape[0] - n))
+    out = jnp.zeros((a_max, r), jnp.int32)
+    return out.at[0, :r0].set(hist)
+
+
+def _fused_pass_kernel(sc_ref, seg_ref, off_ref, reset_ref, cnt_ref, act_ref,
+                       *refs, kpb: int, r: int, a_max: int, n: int,
+                       num_vals: int):
+    """One grid step = one block descriptor row (see module docstring)."""
+    srck_ref = refs[0]
+    srcv_refs = refs[1:1 + num_vals]
+    # refs[1+num_vals : 1+2*num_vals+1] are the aliased alternate buffers —
+    # present only to donate their memory to the outputs; never read.
+    bexcl_ref = refs[2 + 2 * num_vals]
+    nsid_ref = refs[3 + 2 * num_vals]
+    dstk_ref = refs[4 + 2 * num_vals]
+    dstv_refs = refs[5 + 2 * num_vals:5 + 3 * num_vals]
+    hist_ref = refs[5 + 3 * num_vals]
+    carry_ref = refs[6 + 3 * num_vals]
+
+    g = pl.program_id(0)
+
+    @pl.when(g == 0)
+    def _init():
+        hist_ref[...] = jnp.zeros_like(hist_ref)
+        carry_ref[...] = jnp.zeros_like(carry_ref)
+
+    a = seg_ref[g]                               # compact active idx (or a_max)
+    off = off_ref[g]                             # first key of the block
+    cnt = cnt_ref[g]                             # live lanes in the block
+    act = act_ref[g]                             # 1 = partition, 0 = copy-through
+    reset = reset_ref[g]                         # 1 = first block of its region
+
+    keys = srck_ref[pl.ds(off, kpb)]             # ONE read of the pass (§4.3)
+    kdt = keys.dtype
+    one = jnp.ones((), kdt)
+    lane = jax.lax.iota(jnp.int32, kpb)
+    lv = lane < cnt
+
+    # pass digit at the scalar-prefetched window — no pre-shifted key copies
+    lo = sc_ref[0].astype(kdt)
+    width = sc_ref[1].astype(kdt)
+    digit = ((keys >> lo) & ((one << width) - one)).astype(jnp.int32)
+
+    # stable in-block rank per digit + block histogram (§4.4's counters)
+    iota_r = jax.lax.broadcasted_iota(jnp.int32, (kpb, r), 1)
+    onehot = ((digit[:, None] == iota_r) & lv[:, None]).astype(jnp.int32)
+    incl = jnp.cumsum(onehot, axis=0)
+    hv = incl[kpb - 1]                                           # (r,)
+    excl = incl - onehot
+
+    # destination: segment base + in-segment digit offset (fused out of the
+    # previous pass) + in-segment block carry + in-block rank
+    asafe = jnp.clip(a, 0, a_max - 1)
+    carry_prev = jnp.where(reset == 1, jnp.zeros((r,), jnp.int32),
+                           carry_ref[...])
+    base_row = bexcl_ref[asafe] + carry_prev                     # (r,)
+    dest_part = jnp.sum(onehot * (base_row[None, :] + excl), axis=1,
+                        dtype=jnp.int32)
+    gidx = off + lane
+    dest = jnp.where(lv, jnp.where(act == 1, dest_part, gidx), n)
+
+    # ONE write of the pass: on TPU these per-lane stores lower to the r
+    # coalesced per-digit run copies of §4.4 (keys are run-contiguous per
+    # digit after ranking); slot n swallows masked lanes.
+    dstk_ref[dest] = keys
+    for sv_ref, dv_ref in zip(srcv_refs, dstv_refs):
+        dv_ref[dest] = sv_ref[pl.ds(off, kpb)]
+    carry_ref[...] = carry_prev + hv
+
+    # §4.3 fusion: the digit histogram of pass i+1, keyed by the compact id
+    # of the sub-bucket's next-pass segment (a_max rows suffice: R3 makes
+    # every next-pass active bucket a single > ∂̂ sub-bucket).
+    nlo = sc_ref[2].astype(kdt)
+    nwidth = sc_ref[3].astype(kdt)
+    ndig = ((keys >> nlo) & ((one << nwidth) - one)).astype(jnp.int32)
+    sid = nsid_ref[...][asafe * r + jnp.clip(digit, 0, r - 1)]
+    live = lv & (act == 1) & (sid < a_max) & (sc_ref[3] > 0)
+    flat = jnp.where(live, sid * r + ndig, 0)
+    h = hist_ref[...]
+    hist_ref[...] = h.at[flat].add(live.astype(jnp.int32))
+
+
+@functools.partial(jax.jit, static_argnames=("kpb", "r", "a_max", "n",
+                                             "interpret"))
+def fused_counting_pass(src_keys, src_vals, alt_keys, alt_vals, pass_scalars,
+                        blk_seg, blk_off, blk_reset, blk_count, blk_active,
+                        base_excl, next_sid, *, kpb: int, r: int, a_max: int,
+                        n: int, interpret: bool = True):
+    """One full counting pass over all active buckets in ONE Pallas launch.
+
+    Arguments:
+      src_keys / src_vals     — current ping-pong buffers (``pad_length`` long;
+                                vals is a tuple of arrays with leading axis
+                                matching the keys),
+      alt_keys / alt_vals     — alternate buffers, donated to the outputs via
+                                ``input_output_aliases`` (§4.4 in-place
+                                replacement),
+      pass_scalars            — (4,) int32 [lo, width, next_lo, next_width]
+                                digit windows (``plan.digit_window``),
+      blk_*                   — (G,) int32 block descriptor tables
+                                (``plan.make_region_blocks``): compact segment
+                                index (a_max = copy-through), key offset,
+                                carry-reset flag, live-lane count, active flag,
+      base_excl               — (a_max, r) int32 absolute run starts per
+                                (active segment, digit): base + exclusive scan
+                                of the carried histogram,
+      next_sid                — (a_max * r,) int32 map from (segment, digit)
+                                sub-bucket to its compact next-pass active
+                                segment id (a_max = done / not active).
+
+    Returns ``(new_keys, new_vals, hist_next)`` where ``hist_next`` is the
+    (a_max * r,) fused histogram of the NEXT pass's digit (reshape to
+    (a_max, r)); row j matches the j-th next-pass active segment in position
+    order.  Exactly one ``pallas_call`` in the trace — the property the
+    launch-counter regression test pins down.
+    """
+    g_max = blk_seg.shape[0]
+    num_vals = len(src_vals)
+    n_pad = src_keys.shape[0]
+
+    whole = lambda x: pl.BlockSpec(x.shape, lambda i, *_: (0,) * x.ndim)
+    in_specs = ([whole(src_keys)] + [whole(v) for v in src_vals] +
+                [whole(alt_keys)] + [whole(v) for v in alt_vals] +
+                [whole(base_excl), whole(next_sid)])
+    out_specs = ([whole(src_keys)] + [whole(v) for v in src_vals] +
+                 [pl.BlockSpec((a_max * r,), lambda i, *_: (0,)),
+                  pl.BlockSpec((r,), lambda i, *_: (0,))])
+    out_shape = ([jax.ShapeDtypeStruct((n_pad,), src_keys.dtype)] +
+                 [jax.ShapeDtypeStruct(v.shape, v.dtype) for v in src_vals] +
+                 [jax.ShapeDtypeStruct((a_max * r,), jnp.int32),
+                  jax.ShapeDtypeStruct((r,), jnp.int32)])
+    # operand index space includes the 6 scalar-prefetch args; the alternate
+    # buffers (inputs 6+1+num_vals ...) donate their memory to the outputs
+    alt0 = 6 + 1 + num_vals
+    aliases = {alt0 + i: i for i in range(1 + num_vals)}
+
+    out = pl.pallas_call(
+        functools.partial(_fused_pass_kernel, kpb=kpb, r=r, a_max=a_max,
+                          n=n, num_vals=num_vals),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=6,
+            grid=(g_max,),
+            in_specs=in_specs,
+            out_specs=out_specs,
+        ),
+        out_shape=out_shape,
+        input_output_aliases=aliases,
+        interpret=interpret,
+    )(pass_scalars, blk_seg, blk_off, blk_reset, blk_count, blk_active,
+      src_keys, *src_vals, alt_keys, *alt_vals, base_excl, next_sid)
+
+    new_keys = out[0]
+    new_vals = tuple(out[1:1 + num_vals])
+    hist_next = out[1 + num_vals]
+    return new_keys, new_vals, hist_next

@@ -1,13 +1,21 @@
-"""Jit'd composition of the Pallas kernels into full counting-sort passes.
+"""Jit'd composition of the non-fused Pallas kernels (local sort + histogram).
 
-``kernel_counting_pass`` is the on-TPU engine for one partitioning pass of a
-single bucket (histogram kernel -> global scan -> multisplit kernel ->
-coalesced run copies); ``segmented_kernel_pass`` is the same pipeline driven
-by block-assignment descriptors (§4.2) so every active bucket of an MSD pass
-is processed by one constant-size launch; ``segmented_local_sort`` finishes
-done buckets with the stable bitonic kernel.  The jnp drivers in
-``repro.core`` compute the identical permutations and serve as oracles.  On
-this CPU container the kernels run in interpret mode; on real hardware the
+The counting passes themselves live in ``repro.kernels.fused`` — one fused
+launch per pass (§4.3–§4.4) driven by ``repro.core.plan`` — which retired the
+per-bucket multi-launch drivers (``kernel_counting_pass`` /
+``segmented_kernel_pass`` and friends) that previously composed the
+``tile_multisplit`` kernels here.  What remains are the pieces used outside
+the fused pass:
+
+  * ``apply_run_copies``      — the run-copy consumption idiom,
+  * ``segmented_local_sort``  — finish done buckets via the stable bitonic
+                                kernel (R1: one read + one write),
+  * ``kernel_local_sort``     — plain padded-row bitonic driver,
+  * ``tile_histogram_pass``   — standalone histogram sweep (benchmarks /
+                                doctest; the fused engine only needs it via
+                                ``fused.initial_histogram``).
+
+On this CPU container the kernels run in interpret mode; on real hardware the
 same code lowers to Mosaic.
 """
 from __future__ import annotations
@@ -18,186 +26,21 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.histogram import radix_histogram
-from repro.kernels.multisplit import tile_multisplit, tile_multisplit_kv
-from repro.kernels.bitonic import (bitonic_sort_rows, bitonic_sort_rows_kv,
-                                   bitonic_sort_rows_stable)
-from repro.kernels.assigned import make_block_assignments
+from repro.kernels.bitonic import bitonic_sort_rows, bitonic_sort_rows_stable
 
 
 def apply_run_copies(src: jnp.ndarray, dst: jnp.ndarray, tree):
     """Apply (src, dst) run-copy pairs to a pytree of per-key arrays.
 
-    The single idiom for consuming ``kernel_pass_perm``/
-    ``segmented_kernel_pass``/``segmented_local_sort`` output: invalid lanes
-    carry ``src == n``/``dst == n`` (clipped on gather, dropped on scatter),
-    and untouched slots keep their old contents — done buckets persist in
-    place for free.
+    The single idiom for consuming ``segmented_local_sort`` output: invalid
+    lanes carry ``src == n``/``dst == n`` (clipped on gather, dropped on
+    scatter), and untouched slots keep their old contents — done buckets
+    persist in place for free.
     """
     n = jax.tree.leaves(tree)[0].shape[0]
     safe_src = jnp.clip(src, 0, n - 1)
     return jax.tree.map(
         lambda v: v.at[dst].set(v[safe_src], mode="drop"), tree)
-
-
-def _global_run_starts(hist: jnp.ndarray) -> jnp.ndarray:
-    """(T, r) tile histograms -> (T, r) global run starts: digit-major across
-    the whole array, tile-major within a digit (the scan the paper stores
-    block histograms for, M3)."""
-    total = hist.sum(axis=0)                                  # (r,)
-    digit_base = jnp.cumsum(total) - total                    # (r,)
-    tile_carry = jnp.cumsum(hist, axis=0) - hist              # (T, r)
-    return digit_base[None, :] + tile_carry
-
-
-@functools.partial(jax.jit, static_argnames=("shift", "width", "kpb",
-                                             "key_bits", "interpret"))
-def kernel_counting_pass(keys: jnp.ndarray, shift: int, width: int,
-                         key_bits: int, kpb: int = 1024,
-                         interpret: bool = True) -> jnp.ndarray:
-    """One full stable counting-sort pass of a single bucket, kernel-engined.
-
-    Pads to tile granularity with all-ones sentinels (they extract digit r-1
-    and are stably last, so they land in the trailing pad slots and slicing
-    [:n] recovers the real partition).
-    """
-    n = keys.shape[0]
-    pad = (-n) % kpb
-    sentinel = ~jnp.zeros((), keys.dtype)
-    padded = jnp.concatenate([keys, jnp.full((pad,), sentinel, keys.dtype)])
-    tiles = padded.reshape(-1, kpb)
-    t = tiles.shape[0]
-
-    sorted_tiles, sorted_digit, rank, hist = tile_multisplit(
-        tiles, shift, width, key_bits, interpret=interpret)
-
-    # destination of output slot (t, j): start of its run + in-run rank.
-    # On TPU this is r coalesced run copies per tile; XLA scatter here.
-    run_start = jnp.take_along_axis(_global_run_starts(hist), sorted_digit,
-                                    axis=1)
-    dest = run_start + rank
-    out = jnp.zeros((t * kpb,), keys.dtype).at[dest.reshape(-1)].set(
-        sorted_tiles.reshape(-1))
-    return out[:n]
-
-
-@functools.partial(jax.jit, static_argnames=("shift", "width", "kpb",
-                                             "key_bits", "interpret"))
-def kernel_counting_pass_kv(keys: jnp.ndarray, vals: jnp.ndarray, shift: int,
-                            width: int, key_bits: int, kpb: int = 1024,
-                            interpret: bool = True):
-    """Key-value counting-sort pass: values ride the in-VMEM permutation of
-    ``tile_multisplit_kv`` (§4.6) and the same run copies as the keys.
-
-    ``vals`` must be a 32/64-bit integer array (the decomposed-pair layout);
-    arbitrary payloads go through ``kernel_pass_perm`` instead.
-    """
-    n = keys.shape[0]
-    pad = (-n) % kpb
-    sentinel = ~jnp.zeros((), keys.dtype)
-    padded = jnp.concatenate([keys, jnp.full((pad,), sentinel, keys.dtype)])
-    vpad = jnp.concatenate([vals, jnp.zeros((pad,), vals.dtype)])
-    tiles = padded.reshape(-1, kpb)
-    vtiles = vpad.reshape(-1, kpb)
-    t = tiles.shape[0]
-    val_bits = vals.dtype.itemsize * 8
-
-    sk, sv, sd, rank, hist = tile_multisplit_kv(
-        tiles, vtiles, shift, width, key_bits, val_bits, interpret=interpret)
-
-    run_start = jnp.take_along_axis(_global_run_starts(hist), sd, axis=1)
-    dest = (run_start + rank).reshape(-1)
-    out_k = jnp.zeros((t * kpb,), keys.dtype).at[dest].set(sk.reshape(-1))
-    out_v = jnp.zeros((t * kpb,), vals.dtype).at[dest].set(sv.reshape(-1))
-    return out_k[:n], out_v[:n]
-
-
-@functools.partial(jax.jit, static_argnames=("shift", "width", "kpb",
-                                             "key_bits", "interpret"))
-def kernel_pass_perm(keys: jnp.ndarray, shift: int, width: int, key_bits: int,
-                     kpb: int = 1024, interpret: bool = True):
-    """Permutation form of a counting pass: (src, dst) run-copy index pairs.
-
-    The multisplit carries each key's *global input index* as its payload, so
-    the pass's permutation comes back explicitly and a driver can move any
-    pytree of payloads with one gather + scatter per leaf:
-    ``new = old.at[dst].set(old[src], mode="drop")``.  Pad lanes return
-    ``src == n`` and ``dst == n`` (dropped).
-    """
-    n = keys.shape[0]
-    pad = (-n) % kpb
-    sentinel = ~jnp.zeros((), keys.dtype)
-    padded = jnp.concatenate([keys, jnp.full((pad,), sentinel, keys.dtype)])
-    idx = jnp.concatenate([jnp.arange(n, dtype=jnp.int32),
-                           jnp.full((pad,), n, jnp.int32)])
-    tiles = padded.reshape(-1, kpb)
-
-    _, sv, sd, rank, hist = tile_multisplit_kv(
-        tiles, idx.reshape(-1, kpb), shift, width, key_bits, 32,
-        interpret=interpret)
-
-    run_start = jnp.take_along_axis(_global_run_starts(hist), sd, axis=1)
-    src = sv.reshape(-1)
-    dst = jnp.where(src < n, (run_start + rank).reshape(-1), n)
-    return src, dst
-
-
-@functools.partial(jax.jit, static_argnames=("width", "kpb", "g_max",
-                                             "interpret"))
-def segmented_kernel_pass(keys: jnp.ndarray, seg_base: jnp.ndarray,
-                          seg_size: jnp.ndarray, width: int, kpb: int,
-                          g_max: int, interpret: bool = True):
-    """One counting pass over *all active buckets at once* (§4.2–§4.4).
-
-    Block-assignment descriptors chop every segment ([seg_base, seg_base +
-    seg_size) slices of ``keys``) into KPB-sized blocks; one constant-size
-    multisplit launch partitions all blocks; per-segment scans of the block
-    histograms turn in-run ranks into absolute destinations *inside each
-    segment* — the in-place partition of an MSD pass.
-
-    ``keys`` must already expose the pass's digit in their low ``width`` bits
-    (the MSD driver pre-shifts, keeping the kernel's digit extraction static).
-
-    Returns ``(src, dst, seg_hist)``: run-copy index pairs (invalid lanes get
-    ``src == n``/``dst == n``, to be dropped) and the (A, r) per-segment
-    histogram for the driver's bucket bookkeeping (M2).
-    """
-    n = keys.shape[0]
-    a_max = seg_base.shape[0]
-    r = 1 << width
-    key_bits = keys.dtype.itemsize * 8
-
-    ba = make_block_assignments(seg_base, seg_size, kpb, g_max)
-    lane = jnp.arange(kpb, dtype=jnp.int32)
-    gidx = ba.key_offset[:, None] + lane[None, :]             # (G, KPB)
-    seg_safe = jnp.clip(ba.seg_idx, 0, a_max - 1)
-    in_seg = ba.blk_in_seg[:, None] * kpb + lane[None, :]
-    lane_valid = ba.valid[:, None] & (in_seg < seg_size[seg_safe][:, None])
-    safe = jnp.clip(gidx, 0, max(n - 1, 0))
-    sentinel = ~jnp.zeros((), keys.dtype)
-    blocks = jnp.where(lane_valid, keys[safe], sentinel)      # pad digit = r-1
-    idx_blocks = jnp.where(lane_valid, gidx, n).astype(jnp.int32)
-
-    _, sv, sd, rank, hist = tile_multisplit_kv(
-        blocks, idx_blocks, 0, width, key_bits, 32, interpret=interpret)
-
-    # remove the sentinel pads from the histograms (they are stably last in
-    # each block's digit-(r-1) run, so real ranks are unaffected)
-    pads = kpb - lane_valid.sum(axis=1, dtype=jnp.int32)
-    hv = hist.at[:, r - 1].add(-pads) * ba.valid[:, None].astype(jnp.int32)
-
-    # per-segment offsets: M2 bucket histogram + digit-major exclusive scan
-    # inside the segment, M3 block-carry across the segment's blocks
-    seg_hist = jnp.zeros((a_max, r), jnp.int32).at[ba.seg_idx].add(
-        hv, mode="drop")
-    seg_excl = jnp.cumsum(seg_hist, axis=1) - seg_hist        # (A, r)
-    gexcl = jnp.cumsum(hv, axis=0) - hv                       # (G, r)
-    carry = gexcl - gexcl[jnp.clip(ba.first_block, 0, g_max - 1)]
-    base = seg_base[seg_safe][:, None] + seg_excl[seg_safe] + carry
-
-    run_start = jnp.take_along_axis(base, sd, axis=1)
-    src = sv.reshape(-1)                                      # pads carry n
-    dst = jnp.where(src < n, (run_start + rank).reshape(-1), n)
-    return src, dst, seg_hist
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))

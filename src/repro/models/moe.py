@@ -5,7 +5,11 @@ single hybrid-radix counting pass on the expert id (E <= 2^d: qwen3's 128
 experts are one d=7 digit, kimi-k2's 384 one d=9 digit).  The dispatch uses
 ``repro.core.segmented.capacity_dispatch`` — histogram, prefix-sum, scatter
 (§4.1 steps 1–3) with the capacity row playing the paper's reserved memory
-chunk (§4.4).
+chunk (§4.4).  The underlying pass is ``core.plan.single_pass_partition``,
+the same engine-selected primitive as length bucketing and the distributed
+shard partition: one fused Pallas launch under interpret mode (or
+``engine="kernel"`` explicitly), an XLA stable sort on compiled hardware
+until the fused kernel's Mosaic lowering lands.
 
 Dispatch is *grouped*: tokens are viewed as (G, T/G) with G = number of data
 shards, so every group's counting pass stays shard-local (the distributed
@@ -76,7 +80,9 @@ def _sort_dispatch(xg, ids, wts, params, e: int, capacity: int):
     dp = dp_axes()
 
     flat_ids = ids.reshape(g, tg * k)
-    cd = jax.vmap(lambda i: capacity_dispatch(i, e, capacity))(flat_ids)
+    # engine=None -> the backend-resolved shared partition engine (core.plan)
+    cd = jax.vmap(lambda i: capacity_dispatch(i, e, capacity, engine=None))(
+        flat_ids)
     token_of = jnp.minimum(cd.gather_idx, tg * k - 1) // k        # (G, E, C)
     # indices take the EP layout FIRST: the gather then reads the (model-)
     # replicated activations locally on each expert shard — zero dispatch wire.

@@ -124,3 +124,71 @@ def collective_counts(hlo_text: str) -> Dict[str, int]:
         if m:
             out[m.group(2)] += 1
     return dict(out)
+
+
+# ----- Pallas launch census (fused-engine acceptance gate) ------------------
+
+# On real hardware a pallas_call lowers to a custom call with one of these
+# targets; in interpret mode (this CPU container) the launch only exists as
+# the ``pallas_call`` primitive in the jaxpr, so both counters are provided.
+_PALLAS_CUSTOM_CALL_RE = re.compile(
+    r'custom[-_]call(?:_target)?\s*[=(]?\s*@?"?'
+    r'(tpu_custom_call|mosaic|__gpu\$xla\.gpu\.triton|triton_kernel_call)')
+
+
+def pallas_custom_call_count(hlo_text: str) -> int:
+    """Number of Pallas-kernel custom calls in lowered StableHLO/HLO text."""
+    return len(_PALLAS_CUSTOM_CALL_RE.findall(hlo_text))
+
+
+def _sub_jaxprs(eqn):
+    for v in eqn.params.values():
+        vs = v if isinstance(v, (tuple, list)) else (v,)
+        for x in vs:
+            if hasattr(x, "eqns"):                  # open Jaxpr
+                yield x
+            elif hasattr(x, "jaxpr") and hasattr(x.jaxpr, "eqns"):
+                yield x.jaxpr                       # ClosedJaxpr
+
+
+def jaxpr_primitive_counts(jaxpr) -> Dict[str, int]:
+    """Recursive histogram of primitive names in a (Closed)Jaxpr.
+
+    Sub-jaxprs (jit/while/cond/scan bodies) are traversed; a while body is
+    counted ONCE, which is exactly what makes this the per-pass launch
+    census: the fused engine's counting-pass loop body must contain exactly
+    one ``pallas_call`` no matter how many passes execute at runtime.
+    """
+    if hasattr(jaxpr, "jaxpr"):
+        jaxpr = jaxpr.jaxpr
+    out: Dict[str, int] = defaultdict(int)
+    for eqn in jaxpr.eqns:
+        out[eqn.primitive.name] += 1
+        for sub in _sub_jaxprs(eqn):
+            for name, c in jaxpr_primitive_counts(sub).items():
+                out[name] += c
+    return dict(out)
+
+
+def pallas_launch_count(jaxpr) -> int:
+    """Total ``pallas_call`` launch sites in a traced computation."""
+    return jaxpr_primitive_counts(jaxpr).get("pallas_call", 0)
+
+
+def while_body_pallas_launches(jaxpr):
+    """Launch sites inside each while-loop body, outermost-first.
+
+    For the fused hybrid engine this returns ``[1]``: one Pallas launch per
+    counting pass (the loop body), with the prologue histogram and the local
+    sort outside the loop.
+    """
+    if hasattr(jaxpr, "jaxpr"):
+        jaxpr = jaxpr.jaxpr
+    out = []
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "while":
+            out.append(pallas_launch_count(eqn.params["body_jaxpr"]))
+        else:
+            for sub in _sub_jaxprs(eqn):
+                out.extend(while_body_pallas_launches(sub))
+    return out

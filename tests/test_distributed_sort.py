@@ -36,6 +36,13 @@ SCRIPT = textwrap.dedent("""
     check(1, 0, const=True)   # zero entropy
     check(4, 0)           # pipelined
     check(4, 2)
+
+    # degenerate: num_chunks > n_local leaves empty chunks and an empty
+    # splitter sample — the step == 0 guard must keep this traceable
+    fn = jax.jit(make_distributed_sort(mesh, "data", num_chunks=8))
+    x = rng.integers(0, 2**32, 32, dtype=np.uint32)   # n_local = 4 < chunks
+    out, valid, over = map(np.asarray, fn(jnp.asarray(x)))
+    assert valid.sum() == 0 and not over.any()
     print("DIST-TEST-OK")
 """)
 
@@ -45,3 +52,21 @@ def test_distributed_sort_8dev():
     res = subprocess.run([sys.executable, "-c", SCRIPT], capture_output=True,
                          text=True, timeout=600, cwd=".")
     assert "DIST-TEST-OK" in res.stdout, res.stdout + res.stderr
+
+
+def test_select_splitters_degenerate_and_regular():
+    """_make_splitters guard: a gathered sample smaller than the shard count
+    must not stride by 0; it collapses to a single splitter level instead."""
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.core.distributed import _select_splitters
+
+    # degenerate: 0, 1, 3 samples for 8 shards
+    for total in (0, 1, 3):
+        s = np.asarray(_select_splitters(
+            jnp.arange(5, 5 + total, dtype=jnp.uint32), 8))
+        assert s.shape == (7,)
+        assert np.all(s == (0 if total == 0 else 5))
+    # regular: stride = total // nshards, nshards - 1 picks
+    s = np.asarray(_select_splitters(jnp.arange(64, dtype=jnp.uint32), 8))
+    assert s.tolist() == [8, 16, 24, 32, 40, 48, 56]

@@ -4,15 +4,14 @@ import numpy as np
 import jax.numpy as jnp
 import pytest
 
-from repro.kernels import ref
+from repro.core import plan
+from repro.kernels import fused, ref
 from repro.kernels.histogram import radix_histogram
 from repro.kernels.multisplit import tile_multisplit
 from repro.kernels.bitonic import (bitonic_sort_rows, bitonic_sort_rows_kv,
                                    bitonic_sort_rows_stable)
-from repro.kernels.assigned import assigned_histogram, make_block_assignments
-from repro.kernels.ops import (kernel_counting_pass, kernel_counting_pass_kv,
-                               kernel_pass_perm, segmented_kernel_pass,
-                               segmented_local_sort, tile_histogram_pass)
+from repro.kernels.assigned import assigned_histogram
+from repro.kernels.ops import segmented_local_sort, tile_histogram_pass
 from conftest import entropy_keys
 
 
@@ -95,159 +94,11 @@ def test_assigned_histogram_scalar_prefetch(rng):
             assert got[g].sum() == 0
 
 
-@pytest.mark.parametrize("n", [100, 1000, 4096, 10000])
-@pytest.mark.parametrize("shift,width", [(24, 8), (0, 8), (27, 5)])
-def test_kernel_counting_pass_matches_stable_partition(rng, n, shift, width):
-    x = rng.integers(0, 2**32, n, dtype=np.uint32)
-    got = np.asarray(kernel_counting_pass(jnp.asarray(x), shift, width, 32,
-                                          kpb=512, interpret=True))
-    digit = (x >> shift) & ((1 << width) - 1)
-    want = x[np.argsort(digit, kind="stable")]
-    assert np.array_equal(got, want)
-
-
 def test_tile_histogram_pass_total(rng):
     x = rng.integers(0, 2**32, 5000, dtype=np.uint32)
     hist, total = tile_histogram_pass(jnp.asarray(x), 24, 8, kpb=1024)
     want = np.bincount((x >> 24) & 0xFF, minlength=256)
     assert np.array_equal(np.asarray(total), want)
-
-
-def test_full_lsd_sort_composed_from_kernels(rng):
-    """End-to-end: a complete LSD radix sort built ONLY from kernel passes
-    (tile multisplit -> scanned offsets -> run copies) matches np.sort."""
-    x = rng.integers(0, 2**32, 3000, dtype=np.uint32)
-    keys = jnp.asarray(x)
-    for p in range(4):                      # 4 x 8-bit LSD passes
-        keys = kernel_counting_pass(keys, shift=8 * p, width=8, key_bits=32,
-                                    kpb=512, interpret=True)
-    assert np.array_equal(np.sort(x), np.asarray(keys))
-
-
-def test_full_msd_first_pass_matches_hybrid(rng):
-    """The kernel engine's MSD top-digit pass equals the jnp hybrid driver's
-    first counting pass (same partition, same stability)."""
-    from repro.core import to_ordered_bits
-    x = rng.integers(0, 2**32, 2048, dtype=np.uint32)
-    got = np.asarray(kernel_counting_pass(jnp.asarray(x), shift=24, width=8,
-                                          key_bits=32, kpb=256, interpret=True))
-    want = x[np.argsort((x >> 24) & 0xFF, kind="stable")]
-    assert np.array_equal(got, want)
-
-
-@pytest.mark.parametrize("vdtype", [np.uint32, np.int32])
-def test_multisplit_kv_kernel(rng, vdtype):
-    """§4.6 pairs path: values ride the same in-VMEM permutation as the keys."""
-    from repro.kernels.multisplit import tile_multisplit_kv
-    keys = rng.integers(0, 2**32, (3, 256), dtype=np.uint32)
-    if vdtype == np.int32:
-        vals = rng.integers(0, 2**31 - 1, (3, 256)).astype(vdtype)
-    else:
-        vals = rng.integers(0, 2**32, (3, 256), dtype=vdtype)
-    sk, sv, sd, rk, h = tile_multisplit_kv(jnp.asarray(keys), jnp.asarray(vals),
-                                           24, 8, 32, 32, interpret=True)
-    rsk, rsd, rrk, rh = ref.tile_multisplit_ref(jnp.asarray(keys), 24, 8)
-    assert np.array_equal(np.asarray(sk), np.asarray(rsk))
-    assert np.array_equal(np.asarray(h), np.asarray(rh))
-    # pair consistency per tile: value went wherever its key went
-    for t in range(3):
-        kmap = {(k, v) for k, v in zip(keys[t].tolist(), vals[t].tolist())}
-        assert all((k, v) in kmap for k, v in
-                   zip(np.asarray(sk)[t].tolist(), np.asarray(sv)[t].tolist()))
-
-
-# --------------------- kernel-engine drivers (ops.py) -----------------------
-
-@pytest.mark.parametrize("n", [100, 1000, 4096])
-def test_kernel_counting_pass_kv_pairs(rng, n):
-    """§4.6 pairs driver: values ride the multisplit permutation exactly."""
-    x = rng.integers(0, 2**32, n, dtype=np.uint32)
-    v = np.arange(n, dtype=np.int32)
-    ok, ov = kernel_counting_pass_kv(jnp.asarray(x), jnp.asarray(v), 24, 8, 32,
-                                     kpb=512, interpret=True)
-    p = np.argsort((x >> 24) & 0xFF, kind="stable")
-    assert np.array_equal(np.asarray(ok), x[p])
-    assert np.array_equal(np.asarray(ov), v[p])
-
-
-def test_kernel_pass_perm_full_lsd_with_pytree(rng):
-    """(src, dst) run copies move an arbitrary payload pytree through a full
-    LSD sort built only from kernel passes."""
-    n = 2000
-    x = rng.integers(0, 2**32, n, dtype=np.uint32)
-    keys = jnp.asarray(x)
-    vals = {"a": jnp.arange(n, dtype=jnp.int32),
-            "b": jnp.arange(n, dtype=jnp.float32) * 0.5}
-    import jax
-    for p in range(4):
-        src, dst = kernel_pass_perm(keys, shift=8 * p, width=8, key_bits=32,
-                                    kpb=512, interpret=True)
-        safe = jnp.clip(src, 0, n - 1)
-        keys = jnp.zeros_like(keys).at[dst].set(keys[safe], mode="drop")
-        vals = jax.tree.map(
-            lambda v: jnp.zeros_like(v).at[dst].set(v[safe], mode="drop"), vals)
-    assert np.array_equal(np.sort(x), np.asarray(keys))
-    va = np.asarray(vals["a"])
-    assert np.array_equal(x[va], np.sort(x))           # payload consistency
-    assert np.array_equal(va.astype(np.float32) * 0.5, np.asarray(vals["b"]))
-
-
-def test_segmented_kernel_pass_partitions_each_segment(rng):
-    """The descriptor-driven pass partitions every segment in place, stably,
-    and returns the per-segment histograms (M2)."""
-    n = 3000
-    x = rng.integers(0, 2**32, n, dtype=np.uint32)
-    bounds = [(0, 700), (700, 300), (1700, 1300)]      # gap: [1000,1700) inactive
-    seg_base = jnp.asarray([b for b, _ in bounds], jnp.int32)
-    seg_size = jnp.asarray([s for _, s in bounds], jnp.int32)
-    src, dst, seg_hist = segmented_kernel_pass(jnp.asarray(x), seg_base,
-                                               seg_size, 8, 256, 20,
-                                               interpret=True)
-    s, d = np.asarray(src), np.asarray(dst)
-    out = x.copy()
-    m = d < n
-    out[d[m]] = x[np.clip(s, 0, n - 1)[m]]
-    want = x.copy()
-    for b, sz in bounds:
-        seg = x[b:b + sz]
-        want[b:b + sz] = seg[np.argsort(seg & 0xFF, kind="stable")]
-    assert np.array_equal(out, want)
-    assert np.array_equal(out[1000:1700], x[1000:1700])   # gap untouched
-    for i, (b, sz) in enumerate(bounds):
-        assert np.array_equal(np.asarray(seg_hist)[i],
-                              np.bincount(x[b:b + sz] & 0xFF, minlength=256))
-
-
-def test_segmented_kernel_pass_empty_segments(rng):
-    """Zero-size rows of the static descriptor table contribute no blocks."""
-    n = 500
-    x = rng.integers(0, 2**32, n, dtype=np.uint32)
-    seg_base = jnp.asarray([0, 200, 200, 200], jnp.int32)
-    seg_size = jnp.asarray([200, 0, 0, 300], jnp.int32)
-    src, dst, _ = segmented_kernel_pass(jnp.asarray(x), seg_base, seg_size,
-                                        8, 64, 12, interpret=True)
-    s, d = np.asarray(src), np.asarray(dst)
-    out = x.copy()
-    m = d < n
-    out[d[m]] = x[np.clip(s, 0, n - 1)[m]]
-    want = x.copy()
-    for b, sz in [(0, 200), (200, 300)]:
-        seg = x[b:b + sz]
-        want[b:b + sz] = seg[np.argsort(seg & 0xFF, kind="stable")]
-    assert np.array_equal(out, want)
-
-
-def test_make_block_assignments_table(rng):
-    """Descriptor table: segment-major contiguous blocks, correct offsets,
-    padding rows invalid (model I4)."""
-    seg_base = jnp.asarray([0, 100, 400], jnp.int32)
-    seg_size = jnp.asarray([100, 0, 130], jnp.int32)   # 2 + 0 + 3 blocks @ kpb=50
-    ba = make_block_assignments(seg_base, seg_size, 50, 8)
-    assert np.asarray(ba.valid).tolist() == [True] * 5 + [False] * 3
-    assert np.asarray(ba.seg_idx)[:5].tolist() == [0, 0, 2, 2, 2]
-    assert np.asarray(ba.key_offset)[:5].tolist() == [0, 50, 400, 450, 500]
-    assert np.asarray(ba.blk_in_seg)[:5].tolist() == [0, 1, 0, 1, 2]
-    assert np.asarray(ba.first_block)[:5].tolist() == [0, 0, 2, 2, 2]
 
 
 def test_bitonic_stable_kernel_sentinel_safe(rng):
@@ -281,3 +132,135 @@ def test_segmented_local_sort_done_flags(rng):
     want[:300] = np.sort(x[:300])
     want[640:] = np.sort(x[640:])
     assert np.array_equal(out, want)
+
+
+# ------------------- fused counting pass (kernels/fused.py) -----------------
+
+def _run_fused(x, bounds, n, kpb, sc, nsid, a_max, r, vals=()):
+    """Drive one fused launch over explicit segment bounds; returns the new
+    [0, n) key buffer, new value buffers and the fused next-pass histogram."""
+    lo = int(sc[0])
+    width = int(sc[1])
+    base = jnp.asarray([b for b, _ in bounds] + [n] * (a_max - len(bounds)),
+                       jnp.int32)
+    size = jnp.asarray([s for _, s in bounds] + [0] * (a_max - len(bounds)),
+                       jnp.int32)
+    hist = np.zeros((a_max, r), np.int32)
+    for i, (b, s) in enumerate(bounds):
+        digs = (x[b:b + s] >> lo) & ((1 << width) - 1)
+        hist[i, :] = np.bincount(digs, minlength=r)
+    base_excl = (base[:, None] +
+                 jnp.cumsum(jnp.asarray(hist), axis=1) - jnp.asarray(hist))
+    blocks = plan.make_region_blocks(base, size, n, kpb,
+                                     plan.max_region_blocks(n, kpb, a_max))
+    (ck, cv), (ak, av) = fused.make_ping_pong(jnp.asarray(x), vals, kpb)
+    nk, nv, hist_next = fused.fused_counting_pass(
+        ck, cv, ak, av, jnp.asarray(sc, jnp.int32), *blocks, base_excl,
+        jnp.asarray(nsid, jnp.int32), kpb=kpb, r=r, a_max=a_max, n=n,
+        interpret=True)
+    return (np.asarray(nk)[:n], tuple(np.asarray(v)[:n] for v in nv),
+            np.asarray(hist_next).reshape(a_max, r))
+
+
+def test_fused_pass_partitions_segments_and_copies_gaps(rng):
+    """One launch partitions every active segment in place (stably, by the
+    scalar-windowed digit) and copies the done gaps through untouched."""
+    n = 3000
+    x = rng.integers(0, 2**32, n, dtype=np.uint32)
+    bounds = [(0, 700), (1000, 1300)]       # gaps: [700,1000) and [2300,3000)
+    out, _, _ = _run_fused(x, bounds, n, 256, [0, 8, 8, 8],
+                           np.full(2 * 256, 2), a_max=2, r=256)
+    want = x.copy()
+    for b, s in bounds:
+        seg = x[b:b + s]
+        want[b:b + s] = seg[np.argsort(seg & 0xFF, kind="stable")]
+    assert np.array_equal(out, want)
+    assert np.array_equal(out[700:1000], x[700:1000])     # gap untouched
+
+
+def test_fused_pass_values_ride_and_next_histogram(rng):
+    """Values ride the same scatter (§4.6) and the launch returns the NEXT
+    pass's digit histogram for the flagged sub-buckets (§4.3 fusion)."""
+    n = 2048
+    x = rng.integers(0, 2**32, n, dtype=np.uint32)
+    v = np.arange(n, dtype=np.int32)
+    bounds = [(0, 2048)]
+    # flag the digit-3 sub-bucket as next-pass active row 0 (rest: done)
+    nsid = np.full(256, 1, np.int32)
+    nsid[3] = 0
+    out, (ov,), hist_next = _run_fused(
+        x, bounds, n, 256, [8, 8, 0, 8], nsid, a_max=1, r=256,
+        vals=(jnp.asarray(v),))
+    p = np.argsort((x >> 8) & 0xFF, kind="stable")
+    assert np.array_equal(out, x[p])
+    assert np.array_equal(ov, v[p])
+    picked = x[((x >> 8) & 0xFF) == 3]
+    assert np.array_equal(hist_next[0],
+                          np.bincount(picked & 0xFF, minlength=256))
+
+
+def test_fused_pass_empty_and_partial_segments(rng):
+    """Zero-size descriptor rows contribute no blocks; partial-width digits
+    and non-KPB-aligned segments are exact."""
+    n = 500
+    x = rng.integers(0, 2**32, n, dtype=np.uint32)
+    bounds = [(0, 200), (350, 130)]
+    out, _, _ = _run_fused(x, bounds, n, 64, [2, 5, 0, 2],
+                           np.full(4 * 32, 4), a_max=4, r=32)
+    want = x.copy()
+    for b, s in bounds:
+        seg = x[b:b + s]
+        want[b:b + s] = seg[np.argsort((seg >> 2) & 31, kind="stable")]
+    assert np.array_equal(out, want)
+
+
+def test_fused_full_lsd_sort_composed(rng):
+    """End-to-end: a complete LSD radix sort built ONLY from fused passes
+    (one launch per pass, histogram carried across passes) matches np.sort."""
+    from repro.core import lsd_sort
+    x = rng.integers(0, 2**32, 3000, dtype=np.uint32)
+    got = np.asarray(lsd_sort(jnp.asarray(x), d=8, engine="kernel", kpb=512))
+    assert np.array_equal(np.sort(x), got)
+
+
+def test_fused_msd_first_pass_matches_partition(rng):
+    """The fused engine's MSD top-digit pass equals a stable partition by the
+    top byte (same permutation, same stability)."""
+    n = 2048
+    x = rng.integers(0, 2**32, n, dtype=np.uint32)
+    out, _, _ = _run_fused(x, [(0, n)], n, 256, [24, 8, 16, 8],
+                           np.full(256, 1), a_max=1, r=256)
+    want = x[np.argsort((x >> 24) & 0xFF, kind="stable")]
+    assert np.array_equal(out, want)
+
+
+def test_make_region_blocks_table():
+    """Region table: gaps interleave actives, every position in exactly one
+    block, carry resets at region firsts, copy blocks flagged inactive."""
+    base = jnp.asarray([100, 400, 600, 600], jnp.int32)   # 2 padding rows
+    size = jnp.asarray([150, 100, 0, 0], jnp.int32)
+    n, kpb = 600, 100
+    rb = plan.make_region_blocks(base, size, n, kpb,
+                                 plan.max_region_blocks(n, kpb, 4))
+    seg = np.asarray(rb.seg)
+    off = np.asarray(rb.offset)
+    cnt = np.asarray(rb.count)
+    act = np.asarray(rb.active)
+    rst = np.asarray(rb.reset)
+    live = cnt > 0
+    # every key position covered exactly once
+    covered = np.zeros(n, np.int32)
+    for o, c in zip(off[live], cnt[live]):
+        covered[o:o + c] += 1
+    assert np.array_equal(covered, np.ones(n, np.int32))
+    # active blocks carry their compact segment id, copies carry a_max
+    for o, c, s, a in zip(off[live], cnt[live], seg[live], act[live]):
+        inside_active = any(b <= o < b + sz for b, sz in [(100, 150), (400, 100)])
+        assert bool(a) == inside_active, (o, c)
+        if a:
+            assert s == (0 if o < 400 else 1)
+        else:
+            assert s == 4
+    # carry resets exactly at each region's first block
+    firsts = {0, 100, 250, 400, 500}        # gap0, act0 (2 blocks), gap1, act1, gap2
+    assert set(off[live][rst[live] == 1].tolist()) == firsts

@@ -1,0 +1,74 @@
+"""Launch-census regression tests: the fused engine's structural guarantee.
+
+The point of ``kernels.fused`` is that one counting pass is ONE Pallas
+launch (§4.3–§4.4: partition + scatter + next-pass histogram fused), so the
+whole hybrid sort traces to exactly three launch sites — the prologue
+histogram, the per-pass fused launch inside the while loop, and the bitonic
+local sort — independent of n, the data, and the executed pass count.
+``utils.hlo`` counts ``pallas_call`` sites in the jaxpr (interpret mode has
+no custom-call in the lowered HLO; on hardware ``pallas_custom_call_count``
+covers the lowered text).
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import SortConfig, hybrid_sort, lsd_sort, model
+from repro.core.segmented import counting_partition
+from repro.utils import hlo
+
+TCFG = SortConfig(d=8, kpb=64, local_threshold=48, merge_threshold=32)
+
+
+def test_hybrid_fused_engine_one_launch_per_pass():
+    """THE acceptance gate: the counting-pass loop body contains exactly one
+    pallas_call, and the whole trace exactly three (prologue + pass + local
+    sort), for any input size."""
+    for n in (257, 4096, 20000):
+        jx = jax.make_jaxpr(
+            lambda a: hybrid_sort(a, cfg=TCFG, engine="kernel"))(
+                jnp.zeros(n, jnp.uint32))
+        assert hlo.while_body_pallas_launches(jx) == [1], n
+        assert hlo.pallas_launch_count(jx) == 3, n
+
+
+def test_hybrid_fused_launches_with_values_and_stats():
+    x = jnp.zeros(2048, jnp.uint32)
+    v = {"a": jnp.zeros(2048, jnp.int32), "b": jnp.zeros(2048, jnp.float32)}
+    jx = jax.make_jaxpr(lambda a, b: hybrid_sort(
+        a, b, cfg=TCFG, engine="kernel", return_stats=True))(x, v)
+    assert hlo.while_body_pallas_launches(jx) == [1]
+    assert hlo.pallas_launch_count(jx) == 3
+
+
+def test_lsd_fused_engine_launch_count():
+    """LSD unrolls: ⌈k/d⌉ fused launches + the single prologue histogram."""
+    x = jnp.zeros(2048, jnp.uint32)
+    for d in (8, 5):
+        jx = jax.make_jaxpr(
+            lambda a: lsd_sort(a, d=d, engine="kernel", kpb=512))(x)
+        assert hlo.pallas_launch_count(jx) == model.num_digits(32, d) + 1, d
+
+
+def test_counting_partition_fused_launch_count():
+    """One standalone partition = prologue histogram + one fused launch."""
+    ids = jnp.zeros(1000, jnp.int32)
+    jx = jax.make_jaxpr(
+        lambda i: counting_partition(i, 8, engine="kernel"))(ids)
+    assert hlo.pallas_launch_count(jx) == 2
+
+
+def test_jnp_engines_launch_free():
+    x = jnp.zeros(4096, jnp.uint32)
+    for eng in ("argsort", "scan"):
+        jx = jax.make_jaxpr(lambda a: hybrid_sort(a, cfg=TCFG, engine=eng))(x)
+        assert hlo.pallas_launch_count(jx) == 0, eng
+
+
+def test_pallas_custom_call_counter_on_text():
+    """The text-side counter recognises hardware custom-call spellings."""
+    txt = ('%0 = stablehlo.custom_call @tpu_custom_call(%arg0)\n'
+           'ROOT %1 = (f32[8]) custom-call(%0), '
+           'custom_call_target="tpu_custom_call"\n')
+    assert hlo.pallas_custom_call_count(txt) == 2
+    assert hlo.pallas_custom_call_count("stablehlo.sort(%arg0)") == 0
