@@ -48,30 +48,35 @@ def collect(fast: bool = True, smoke: bool = False) -> dict:
     return annotate(out)
 
 
-def annotate(rows: dict) -> dict:
-    """Add kernel-vs-argsort speedup ratios and regression notes in place.
+def annotate(rows: dict, baseline: str = "argsort",
+             contender: str = "kernel") -> dict:
+    """Add contender-vs-baseline speedup ratios and regression notes in place.
 
-    ``ratios/<kind>/n=<n>`` = argsort_us / kernel_us (> 1: kernel faster).
-    ``notes`` is a list of human-readable warnings, non-empty whenever the
-    kernel engine is slower than the argsort baseline it must eventually
-    beat — the self-interpretation contract of BENCH_hybrid.json.
+    ``ratios/<kind>/n=<n>`` = baseline_us / contender_us (> 1: contender
+    faster; non-default contenders get a ``/<contender>`` suffix so several
+    pairings coexist in one file).  ``notes`` is a list of human-readable
+    warnings, non-empty whenever the contender engine is slower than the
+    baseline it must eventually beat — the self-interpretation contract
+    every BENCH file (BENCH_hybrid.json, BENCH_ooc.json) carries.  Repeated
+    calls with different contenders extend ``notes`` rather than reset it.
     """
     ratios = {}
-    notes = []
+    notes = rows.get("notes", [])
+    suffix = "" if contender == "kernel" else f"/{contender}"
     for name, us in list(rows.items()):
-        if not (isinstance(us, float) and name.endswith("/argsort")):
+        if not (isinstance(us, float) and name.endswith(f"/{baseline}")):
             continue
-        kname = name[: -len("argsort")] + "kernel"
+        kname = name[: -len(baseline)] + contender
         if kname not in rows:
             continue
-        stem = name[: -len("/argsort")]
+        stem = name[: -len(f"/{baseline}")]
         ratio = us / rows[kname] if rows[kname] else float("inf")
-        ratios[f"ratios/{stem}"] = ratio
+        ratios[f"ratios/{stem}{suffix}"] = ratio
         if ratio < 1.0:
             notes.append(
-                f"{stem}: kernel engine {1.0 / ratio:.2f}x SLOWER than "
-                f"argsort baseline (kernel {rows[kname]:.0f}us vs argsort "
-                f"{us:.0f}us)")
+                f"{stem}: {contender} engine {1.0 / ratio:.2f}x SLOWER than "
+                f"{baseline} baseline ({contender} {rows[kname]:.0f}us vs "
+                f"{baseline} {us:.0f}us)")
     rows.update(ratios)
     rows["notes"] = notes
     return rows

@@ -1,0 +1,86 @@
+"""Out-of-core sweep: chunked pipeline vs one-shot argsort (BENCH_ooc.json).
+
+Times ``oocsort`` — chunked device runs under double-buffered staging plus
+⌈log_K⌉ streaming merge rounds (§5) — against the one-shot ``jnp.argsort``
+path on the same host round-trip (device_put, device sort, device_get), over
+the §5 input distributions (uniform / zipf / clustered).  Per case two
+pipeline rows are measured — ``/ooc-kernel`` (fused-kernel chunk sorts) and
+``/ooc-argsort`` (XLA-sort chunk sorts; both share the staging + merge
+kernel) — and ``engines.annotate`` attaches a ``ratios/...`` entry
+(argsort_us / ooc_us, > 1 = the pipeline wins) and ``notes`` regression
+warnings for EACH against the ``/argsort`` baseline.  On this CPU container
+interpret-mode overhead dominates, so the tracked §5 roofline proxy is the
+ratio trajectory plus the structural gates (one launch per merge round,
+sort-free merge) enforced by the test wall.
+
+Every row draws its keys from an explicit per-row seed
+(``data.distributions``), so rows replay bit-identically in isolation.
+
+``python -m benchmarks.run --json --ooc`` writes BENCH_ooc.json.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import timeit, row
+from benchmarks.engines import annotate
+from repro.core import SortConfig
+from repro.core.outofcore import oocsort
+from repro.data.distributions import clustered_keys, entropy_keys, zipf_keys
+
+# modest chunk-sort tile/thresholds: interpret-mode tractable on one core
+CFG = SortConfig(d=8, kpb=256, local_threshold=768, merge_threshold=512)
+KWAY = 4
+TILE = 128
+
+DISTS = {
+    "uniform": lambda seed, n: entropy_keys(seed, n, 0),
+    "zipf": lambda seed, n: zipf_keys(seed, n, a=1.2),
+    "clustered": lambda seed, n: clustered_keys(seed, n, clusters=64),
+}
+
+
+def one_shot_argsort(x: np.ndarray) -> np.ndarray:
+    """Baseline: same host->device->host round trip, one device sort."""
+    return np.asarray(jnp.sort(jax.device_put(x)))
+
+
+def collect(fast: bool = True, smoke: bool = False) -> dict:
+    if smoke:
+        cases = [(1 << 10, 1 << 8)]                    # 4 chunks, 1 round
+        dists = ("uniform",)
+    elif fast:
+        cases = [(1 << 12, 1 << 10), (1 << 14, 1 << 11)]   # 4 / 8 chunks
+        dists = ("uniform", "zipf", "clustered")
+    else:
+        cases = [(1 << 16, 1 << 13), (1 << 18, 1 << 15)]
+        dists = ("uniform", "zipf", "clustered")
+    out = {}
+    for seed, (n, chunk) in enumerate(cases):
+        for dist in dists:
+            x = DISTS[dist](seed, n)
+            stem = f"ooc/sort/n={n}/chunks={n // chunk}/{dist}"
+            out[f"{stem}/argsort"] = timeit(one_shot_argsort, x) * 1e6
+            for eng in ("kernel", "argsort"):
+                out[f"{stem}/ooc-{eng}"] = timeit(
+                    lambda a, e=eng: oocsort(a, chunk, cfg=CFG, engine=e,
+                                             kway=KWAY, tile=TILE), x) * 1e6
+    out = annotate(out, contender="ooc-kernel")
+    return annotate(out, contender="ooc-argsort")
+
+
+def main(fast: bool = True, smoke: bool = False) -> dict:
+    rows = collect(fast, smoke=smoke)
+    for name, us in rows.items():
+        if name == "notes":
+            continue
+        if name.startswith("ratios/"):
+            row(f"ooc/{name}", 0.0, f"{us:.3f}x-argsort-over-ooc")
+            continue
+        n = int(name.split("n=")[1].split("/")[0])
+        row(name, us, f"{1e3 * us / n:.2f}ns/key")
+    for note in rows["notes"]:
+        print(f"# WARNING {note}")
+    return rows

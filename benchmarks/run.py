@@ -11,13 +11,19 @@ carries ``ratios/...`` speedup entries (argsort / kernel, > 1 means the
 kernel engine wins) and a ``notes`` list that is non-empty whenever the
 kernel engine regresses below the argsort baseline.
 
+``--ooc`` adds the §5 out-of-core sweep (chunked kernel-engine pipeline +
+streaming k-way merge vs one-shot argsort, ``benchmarks.ooc``); with
+``--json PATH`` its rows land in ``BENCH_ooc.json`` next to PATH, carrying
+the same ``ratios/...`` + ``notes`` contract.
+
 ``python -m benchmarks.run [--full] [--smoke] [--only fig6,...]
-                           [--json [PATH]]``
+                           [--json [PATH]] [--ooc]``
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 import traceback
 
@@ -36,6 +42,8 @@ def main() -> None:
     ap.add_argument("--json", nargs="?", const="BENCH_hybrid.json",
                     default=None, metavar="PATH",
                     help="write the engine-sweep rows to PATH as JSON")
+    ap.add_argument("--ooc", action="store_true",
+                    help="also run the out-of-core sweep (BENCH_ooc.json)")
     args = ap.parse_args()
     only = args.only.split(",") if args.only else None
     if args.smoke and only is None:
@@ -57,15 +65,24 @@ def main() -> None:
             traceback.print_exc(file=sys.stderr)
             print(f"{name}/ERROR,0.0,{type(e).__name__}")
 
+    def dump(rows, path):
+        with open(path, "w") as f:
+            json.dump(rows, f, indent=2, sort_keys=True)
+        print(f"# wrote {path}", file=sys.stderr)
+        if rows["notes"]:
+            print(f"# {len(rows['notes'])} regression note(s) in {path}",
+                  file=sys.stderr)
+
     if args.json is not None:
         from benchmarks import engines
-        rows = engines.main(fast=not args.full, smoke=args.smoke)
-        with open(args.json, "w") as f:
-            json.dump(rows, f, indent=2, sort_keys=True)
-        print(f"# wrote {args.json}", file=sys.stderr)
-        if rows["notes"]:
-            print(f"# {len(rows['notes'])} regression note(s) in "
-                  f"{args.json}", file=sys.stderr)
+        dump(engines.main(fast=not args.full, smoke=args.smoke), args.json)
+
+    if args.ooc:
+        from benchmarks import ooc
+        rows = ooc.main(fast=not args.full, smoke=args.smoke)
+        if args.json is not None:
+            dump(rows, os.path.join(os.path.dirname(args.json) or ".",
+                                    "BENCH_ooc.json"))
 
 
 if __name__ == "__main__":

@@ -14,14 +14,15 @@ export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 echo "=== tier-1 tests ==="
 python -m pytest -q "$@"
 
-echo "=== benchmark smoke (interpret mode) ==="
-python -m benchmarks.run --json BENCH_smoke.json --smoke
+echo "=== benchmark smoke (interpret mode, engine + out-of-core sweeps) ==="
+python -m benchmarks.run --json BENCH_smoke.json --smoke --ooc
 
 echo "=== smoke bench notes ==="
 python - <<'EOF'
 import json
-rows = json.load(open("BENCH_smoke.json"))
-for note in rows.get("notes", []):
-    print("WARNING:", note)
-print("smoke rows:", sum(1 for k in rows if k != "notes"))
+for path in ("BENCH_smoke.json", "BENCH_ooc.json"):
+    rows = json.load(open(path))
+    for note in rows.get("notes", []):
+        print(f"WARNING [{path}]:", note)
+    print(f"{path} rows:", sum(1 for k in rows if k != "notes"))
 EOF

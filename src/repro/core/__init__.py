@@ -7,17 +7,21 @@ Public API:
   counting_partition — single counting-sort pass (MoE dispatch building block)
   segmented_sort     — batched independent sorts
   distributed_sort   — §5: multi-chip pipelined sort (shard_map)
+  oocsort            — §5: out-of-core pipelined sort (chunked device runs
+                       under double-buffered staging + streaming k-way merge)
 """
 from repro.core.bijection import to_ordered_bits, from_ordered_bits, key_bits
 from repro.core.hybrid import hybrid_sort, SortStats
 from repro.core.lsd import lsd_sort
 from repro.core.model import (SortConfig, default_config, memory_budget,
                               pass_counts, expected_speedup)
+from repro.core.outofcore import oocsort, OocStats
 from repro.core.ranks import ENGINES, resolve_engine
 
 __all__ = [
     "hybrid_sort", "lsd_sort", "SortStats", "SortConfig", "default_config",
     "memory_budget", "pass_counts", "expected_speedup",
     "to_ordered_bits", "from_ordered_bits", "key_bits",
+    "oocsort", "OocStats",
     "ENGINES", "resolve_engine",
 ]

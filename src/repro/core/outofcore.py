@@ -1,0 +1,282 @@
+"""Out-of-core pipelined sort: chunked device runs + streaming k-way merges.
+
+The paper's second headline (§5, the 64 GB end-to-end result) sorts inputs
+that exceed device memory with a chunk-sort-then-merge pipeline: the host
+array streams to the device in chunks, every chunk is sorted on-device while
+the next chunk's transfer is in flight, and the sorted runs are merged by a
+device merge kernel.  ``oocsort`` is that pipeline in JAX terms — the
+*sort* phase works in chunk-sized device buffers; the merge phase currently
+keeps the full flat run buffer on device (one launch per round over every
+group), so true beyond-device-memory capacity waits on the host-spill
+streaming of group-sized merge slabs (ROADMAP open item).  The pipeline
+structure, accounting and census are the §5 shape:
+
+  1. the host-resident input (array or chunk iterator) is re-chunked into
+     runs of ``chunk_elems`` keys (+ value slabs),
+  2. chunk i+1 is staged with ``jax.device_put`` *before* chunk i's sort is
+     consumed — JAX dispatch is asynchronous, so the upload and the sort
+     overlap (double buffering, the §5 transfer/compute pipeline),
+  3. each chunk is sorted by ``hybrid_sort`` — the fused single-launch
+     counting-pass engine on donated ping-pong buffers (PR 1–2) — and mapped
+     to order-preserving unsigned bits so runs merge bitwise,
+  4. ⌈log_K(runs)⌉ rounds of the merge-path kernel
+     (``kernels.merge.kway_merge_round``) fuse K adjacent runs per group,
+     ONE Pallas launch per round, ping-pong buffers donated between rounds,
+  5. the merged keys map back to the key dtype and land on the host.
+
+Transfer accounting (§5): every key crosses the host link exactly twice
+(staged in chunks overlapped with compute, gathered once at the end), and
+device memory sweeps total ``(2·⌈k/d⌉ + 1)`` for the chunk sorts (§4.3/§4.4
+accounting at chunk size), plus one run-marshalling sweep (1R + 2W:
+concatenating the sorted runs into the flat merge buffer and allocating its
+sentinel-filled alternate), plus ``2·⌈log_K(C)⌉`` for the merge rounds —
+the table in ``repro.kernels``'s docstring.
+
+Determinism: the merge breaks ties by (key, run, position), so runs of equal
+keys keep chunk order and the output is a pure function of the input stream
+and the chunking — byte-identical across engines, certified by the oocsort
+parity wall.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Iterable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bijection, model
+from repro.core.hybrid import hybrid_sort
+from repro.kernels import merge as kmerge
+from repro.kernels.fused import pad_length
+
+
+class OocStats(NamedTuple):
+    num_chunks: int      # sorted device runs the input was split into
+    merge_rounds: int    # ⌈log_kway(num_chunks)⌉ merge-kernel rounds
+    chunk_elems: int     # device chunk capacity the plan used
+    h2d_bytes: int       # host->device bytes staged (keys + values)
+    d2h_bytes: int       # device->host bytes gathered at the end
+
+
+def _as_stream(reader, values):
+    """Normalise the input to a stream of (keys, values-or-None) pieces."""
+    if hasattr(reader, "shape") and hasattr(reader, "dtype"):
+        yield reader, values
+        return
+    if values is not None:
+        raise ValueError("with an iterator reader, pass values inline as "
+                         "(keys, values) tuples")
+    for item in reader:
+        if isinstance(item, tuple):
+            yield item
+        else:
+            yield item, None
+
+
+def _rechunk(stream, chunk_elems: int):
+    """Re-cut a stream of (keys, values) pieces into device-sized chunks.
+
+    Returns ``(chunks, treedef, key_dtype, empty_leaves)`` where each chunk
+    is ``(keys, value_leaves)`` with ``len(keys) <= chunk_elems`` (only the
+    last chunk may be short) and ``empty_leaves`` are zero-length prototypes
+    of the value leaves.  Host-side only: pieces are numpy views/copies.
+    """
+    buf_k, buf_v = [], []
+    chunks = []
+    treedef = None
+    key_dtype = None
+    empty_leaves = ()
+    pending = 0
+
+    def emit(upto):
+        nonlocal buf_k, buf_v, pending
+        k = np.concatenate(buf_k) if len(buf_k) > 1 else buf_k[0]
+        vs = [np.concatenate(c) if len(c) > 1 else c[0] for c in buf_v]
+        chunks.append((k[:upto], tuple(v[:upto] for v in vs)))
+        buf_k = [k[upto:]] if upto < k.shape[0] else []
+        buf_v = [[v[upto:]] for v in vs] if upto < k.shape[0] else \
+            [[] for _ in vs]
+        pending -= upto
+
+    for keys, vals in stream:
+        keys = np.asarray(keys)
+        if keys.ndim != 1:
+            raise ValueError("oocsort expects 1-D key chunks")
+        leaves, td = jax.tree.flatten(vals)
+        leaves = [np.asarray(v) for v in leaves]
+        if treedef is None:
+            treedef, key_dtype = td, keys.dtype
+            empty_leaves = tuple(v[:0] for v in leaves)
+            buf_v = [[] for _ in leaves]
+        elif td != treedef:
+            raise ValueError("inconsistent value structure across chunks")
+        if keys.dtype != key_dtype:
+            raise ValueError(f"inconsistent key dtype across chunks: "
+                             f"{keys.dtype} vs {key_dtype}")
+        if any(v.dtype != p.dtype for v, p in zip(leaves, empty_leaves)):
+            raise ValueError("inconsistent value dtypes across chunks")
+        if any(v.ndim != 1 for v in leaves):
+            raise ValueError("oocsort value leaves must be 1-D (the merge "
+                             "kernel moves flat per-key slabs)")
+        if any(v.shape[0] != keys.shape[0] for v in leaves):
+            raise ValueError("value leaves must match the key length")
+        if keys.shape[0] == 0:
+            continue
+        buf_k.append(keys)
+        for c, v in zip(buf_v, leaves):
+            c.append(v)
+        pending += keys.shape[0]
+        while pending >= chunk_elems:
+            emit(chunk_elems)
+    if pending:
+        emit(pending)
+    return chunks, treedef, key_dtype, empty_leaves
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "engine", "interpret"))
+def _sort_chunk(keys, leaves, cfg, engine, interpret):
+    """Sort one staged chunk; emit the run as order-preserving unsigned bits."""
+    if leaves:
+        sk, sv = hybrid_sort(keys, leaves, cfg=cfg, engine=engine,
+                             interpret=interpret)
+    else:
+        sk = hybrid_sort(keys, cfg=cfg, engine=engine, interpret=interpret)
+        sv = ()
+    return bijection.to_ordered_bits(sk), sv
+
+
+@functools.partial(jax.jit, static_argnames=("lens", "kway", "tile", "n",
+                                             "interpret"),
+                   donate_argnums=(2, 3))
+def merge_round(src_keys, src_vals, alt_keys, alt_vals, *, lens, kway: int,
+                tile: int, n: int, interpret: bool = True):
+    """One k-way merge round: diagonal partition + ONE merge-kernel launch.
+
+    ``lens`` is the static tuple of current run lengths; groups of up to
+    ``kway`` adjacent runs merge into one run each.  The partition tables are
+    sort-free binary searches; the data movement is the single
+    ``kway_merge_round`` launch (the per-round census gate).  The alternate
+    buffers are donated.
+    """
+    tables = kmerge.merge_path_partition(src_keys, lens, kway, tile)
+    return kmerge.kway_merge_round(src_keys, src_vals, alt_keys, alt_vals,
+                                   *tables, kway=kway, tpb=tile, n=n,
+                                   interpret=interpret)
+
+
+def oocsort(reader, chunk_elems: int, values: Any = None,
+            cfg: Optional[model.SortConfig] = None,
+            engine: Optional[str] = None, interpret: Optional[bool] = None,
+            kway: int = 4, tile: int = 256, return_stats: bool = False):
+    """Sort a host-resident array (or chunk stream) larger than one device run.
+
+    ``reader`` is a 1-D numpy array, an iterable of 1-D key chunks (all of
+    one dtype), or an iterable of ``(keys, values)`` chunk tuples;
+    ``values`` (array-input only) is a 1-D array or pytree of 1-D arrays
+    permuted alongside the keys (flat per-key slabs — the merge kernel's
+    payload layout).  The
+    input is cut into runs of ``chunk_elems`` keys; each run is sorted
+    on-device by ``hybrid_sort`` (``cfg``/``engine`` as there) while the next
+    chunk's ``jax.device_put`` is in flight, and the runs are merged by
+    ⌈log_``kway``⌉ rounds of the merge-path kernel, one Pallas launch per
+    round on donated ping-pong buffers.
+
+    Returns host numpy arrays: ``sorted_keys``, or ``(sorted_keys,
+    permuted_values)`` when values were given; append an :class:`OocStats`
+    when ``return_stats``.  Pair movement is consistent but — like
+    ``hybrid_sort`` — not stable across equal keys *within* a chunk; across
+    chunks the merge keeps run order (ties break by run index).
+    """
+    if chunk_elems < 1:
+        raise ValueError("chunk_elems must be >= 1")
+    if kway < 2:
+        raise ValueError("kway must be >= 2")
+    if tile < 8:
+        raise ValueError("tile must be >= 8")
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+
+    chunks, treedef, key_dtype, empty_leaves = _rechunk(
+        _as_stream(reader, values), chunk_elems)
+    had_values = treedef is not None and treedef.num_leaves > 0
+
+    def finish(keys_np, leaves_np, stats):
+        out = (keys_np,) if not had_values else \
+            (keys_np, jax.tree.unflatten(treedef, list(leaves_np)))
+        if return_stats:
+            out = out + (stats,)
+        return out[0] if len(out) == 1 else out
+
+    if not chunks:
+        if key_dtype is None:
+            raise ValueError("empty iterator reader: yield at least one "
+                             "(possibly empty) chunk to fix the dtype")
+        stats = OocStats(0, 0, chunk_elems, 0, 0)
+        return finish(np.empty((0,), key_dtype), empty_leaves, stats)
+
+    k = bijection.key_bits(key_dtype)
+    if k > 32 and not jax.config.jax_enable_x64:
+        raise RuntimeError("64-bit keys require jax_enable_x64")
+    if not jax.config.jax_enable_x64:
+        # leaf dtypes are chunk-uniform (_rechunk), so one chunk decides;
+        # device_put would otherwise silently truncate 64-bit payloads
+        for v in chunks[0][1]:
+            if v.dtype.itemsize > 4:
+                raise RuntimeError(
+                    f"64-bit value leaves ({v.dtype}) require "
+                    "jax_enable_x64")
+
+    # --- chunk phase: double-buffered staging, §5's upload/sort overlap ----
+    h2d = 0
+    runs = []
+    staged = jax.device_put(chunks[0])
+    h2d += chunks[0][0].nbytes + sum(v.nbytes for v in chunks[0][1])
+    for nxt in chunks[1:]:
+        nxt_dev = jax.device_put(nxt)           # stage i+1 ...
+        h2d += nxt[0].nbytes + sum(v.nbytes for v in nxt[1])
+        runs.append(_sort_chunk(*staged, cfg, engine, interpret))  # sort i
+        staged = nxt_dev
+    runs.append(_sort_chunk(*staged, cfg, engine, interpret))
+    num_chunks = len(chunks)
+    lens = [c[0].shape[0] for c in chunks]
+    n = sum(lens)
+
+    # --- merge phase: flat ping-pong run buffers, one launch per round -----
+    rounds = 0
+    if num_chunks == 1:
+        ck, cv = runs[0]             # single run: no marshalling, no merge
+    else:
+        # the padded current/alternate buffers follow fused.make_ping_pong's
+        # contract (sentinel key pad, zero value pad), built inline so run
+        # marshalling is a single concatenate — one fewer sweep than padding
+        # a pre-concatenated copy
+        udtype = runs[0][0].dtype
+        n_pad = pad_length(n, tile)
+        sentinel = ~jnp.zeros((), udtype)
+        ck = jnp.concatenate([r[0] for r in runs] +
+                             [jnp.full((n_pad - n,), sentinel, udtype)])
+        num_leaves = len(runs[0][1])
+        cv = tuple(
+            jnp.concatenate([r[1][i] for r in runs] +
+                            [jnp.zeros((n_pad - n,), runs[0][1][i].dtype)])
+            for i in range(num_leaves))
+        ak = jnp.full_like(ck, sentinel)
+        av = tuple(jnp.zeros_like(v) for v in cv)
+        del runs, staged, chunks     # release the per-run device buffers:
+        # the merge phase's footprint is the two flat ping-pong buffers only
+
+        while len(lens) > 1:
+            nk, nv = merge_round(ck, cv, ak, av, lens=tuple(lens), kway=kway,
+                                 tile=tile, n=n, interpret=interpret)
+            ak, av = ck, cv                  # old current donates next round
+            ck, cv = nk, nv
+            lens = [sum(g) for g in kmerge.merge_groups(lens, kway)]
+            rounds += 1
+
+    keys_np = np.asarray(bijection.from_ordered_bits(ck[:n], key_dtype))
+    leaves_np = tuple(np.asarray(v[:n]) for v in cv)
+    d2h = keys_np.nbytes + sum(v.nbytes for v in leaves_np)
+    stats = OocStats(num_chunks, rounds, chunk_elems, h2d, d2h)
+    return finish(keys_np, leaves_np, stats)

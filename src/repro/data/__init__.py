@@ -1,5 +1,6 @@
 from repro.data.pipeline import SyntheticLMData, length_bucketed_batches
-from repro.data.distributions import entropy_keys, zipf_keys
+from repro.data.distributions import (as_generator, clustered_keys,
+                                      constant_keys, entropy_keys, zipf_keys)
 
-__all__ = ["SyntheticLMData", "length_bucketed_batches", "entropy_keys",
-           "zipf_keys"]
+__all__ = ["SyntheticLMData", "length_bucketed_batches", "as_generator",
+           "clustered_keys", "constant_keys", "entropy_keys", "zipf_keys"]

@@ -10,6 +10,11 @@ Length bucketing runs explicit d=8 counting passes through
 primitive as MoE dispatch and the distributed sort's shard step
 (``core.plan.single_pass_partition``; fused Pallas kernel under interpret
 mode, XLA stable sort on compiled hardware until the Mosaic lowering lands).
+Corpora larger than one device run route through the §5 out-of-core
+pipeline instead (``ooc_chunk_elems``): shard-sized batches are ordered by
+``core.outofcore.oocsort`` — chunked device sorts under double-buffered
+staging plus the streaming k-way merge — so bucketing scales past device
+memory with the same packing contract.
 """
 from __future__ import annotations
 
@@ -56,28 +61,40 @@ class SyntheticLMData:
 
 
 def length_bucketed_batches(lengths: np.ndarray, batch_tokens: int,
-                            engine: Optional[str] = None):
+                            engine: Optional[str] = None,
+                            ooc_chunk_elems: Optional[int] = None):
     """Order documents by length via two LSD counting passes, then pack.
 
     The ordering is an explicit LSD radix sort on the shared engine-selected
     partition primitive: chained d=8 ``counting_partition`` passes, one per
-    occupied length byte (typical 16-bit lengths: two passes).  Returns
-    (order, bucket_bounds): ``order`` is the sorted document order
-    (longest-with-longest minimises padding waste), bounds delimit batches of
-    at most ``batch_tokens`` padded tokens.
+    occupied length byte (typical 16-bit lengths: two passes).  Corpora that
+    exceed one device run set ``ooc_chunk_elems``: the order then comes from
+    the §5 out-of-core pipeline (``core.outofcore.oocsort`` with the doc
+    indices as the value payload — chunk sorts overlapped with staging, then
+    streaming k-way merge rounds).  Returns (order, bucket_bounds):
+    ``order`` is the sorted document order (longest-with-longest minimises
+    padding waste), bounds delimit batches of at most ``batch_tokens``
+    padded tokens.
     """
     lengths = np.asarray(lengths, np.uint32)
-    # host-side: only as many passes as the longest document needs
-    max_len = int(lengths.max()) if lengths.size else 0
-    npasses = max(1, (max_len.bit_length() + 7) // 8)
-    x = lengths.copy()
-    order = np.arange(lengths.shape[0], dtype=np.int32)
-    for p in range(npasses):      # stable LSD, least-significant byte first
-        ids = jnp.asarray(((x >> (8 * p)) & 0xFF).astype(np.int32))
-        perm = np.asarray(counting_partition(ids, 256, engine=engine).perm)
-        x = x[perm]
-        order = order[perm]
-    sorted_len = x
+    if ooc_chunk_elems is not None:
+        from repro.core.outofcore import oocsort
+        sorted_len, order = oocsort(
+            lengths, ooc_chunk_elems, engine=engine,
+            values=np.arange(lengths.shape[0], dtype=np.int32))
+    else:
+        # host-side: only as many passes as the longest document needs
+        max_len = int(lengths.max()) if lengths.size else 0
+        npasses = max(1, (max_len.bit_length() + 7) // 8)
+        x = lengths.copy()
+        order = np.arange(lengths.shape[0], dtype=np.int32)
+        for p in range(npasses):  # stable LSD, least-significant byte first
+            ids = jnp.asarray(((x >> (8 * p)) & 0xFF).astype(np.int32))
+            perm = np.asarray(counting_partition(ids, 256,
+                                                 engine=engine).perm)
+            x = x[perm]
+            order = order[perm]
+        sorted_len = x
 
     bounds = [0]
     cur_max = 0

@@ -3,6 +3,10 @@
 fused       — ONE launch per counting pass: block-descriptor partition +
               coalesced scatter of pass i fused with the digit histogram of
               pass i+1, on donated ping-pong buffers (§4.2–§4.4)
+merge       — ONE launch per k-way merge round (§5): merge-path diagonal
+              partition of K sorted runs per output tile, coalesced merge
+              writes with KV payloads, donated ping-pong buffers — the
+              device half of ``core.outofcore``'s pipelined sort
 histogram   — one-hot MXU contraction histogram (§4.3's atomics, TPU-native)
 multisplit  — in-VMEM tile partition + write combining (§4.4 / Fig. 3); the
               fused pass's per-block partition math, kept as the standalone
@@ -26,6 +30,28 @@ reduction, and the whole sort pays exactly one extra 1R prologue sweep
 ``3·⌈k/5⌉·n·b`` for the CUB-style LSD baseline — the paper's 1.6–1.75x
 traffic headline.  Bookkeeping arrays (M2–M5 of §4.5) are O(n/∂̂ · r) and do
 not change the leading term.
+
+Out-of-core transfer accounting (§5, the BENCH_ooc.json roofline row): for
+N keys in C = ⌈N/chunk⌉ device-sized chunks merged K ways per round, per
+key of b bytes (values: v bytes):
+
+| phase                       | host-link bytes | device sweeps (R+W)        |
+|-----------------------------|-----------------|----------------------------|
+| chunk staging (device_put)  | 1·(b+v)         | —  (overlapped with sorts) |
+| chunk sorts (fused engine)  | —               | (2·⌈k/d⌉ + 1)·b + 2·⌈k/d⌉·v|
+| run marshalling (concat +   | —               | 3·(b+v)  (1R + 2W, once)   |
+|   alternate-buffer fill)    |                 |                            |
+| merge rounds (merge kernel) | —               | 2·⌈log_K C⌉·(b+v)          |
+| result gather               | 1·(b+v)         | —                          |
+
+Every key crosses the host link exactly twice regardless of C (the §5
+pipeline hides the upload behind the previous chunk's sort), and each merge
+round reads and writes the whole run buffer once — one ``pallas_call`` per
+round, ⌈log_K C⌉ rounds.  The merge-path diagonal searches add
+O(tiles · K · log chunk) gathered elements, sub-leading for any real tile
+size.  On this CPU container interpret-mode overhead dominates, so the
+tracked proxy is the argsort/ooc ratio trajectory in BENCH_ooc.json plus
+the structural census (``utils.hlo.launch_census``).
 """
 from repro.kernels.histogram import radix_histogram
 from repro.kernels.multisplit import tile_multisplit, tile_multisplit_kv
@@ -34,6 +60,8 @@ from repro.kernels.bitonic import (bitonic_sort_rows, bitonic_sort_rows_kv,
 from repro.kernels.assigned import assigned_histogram
 from repro.kernels.fused import (fused_counting_pass, initial_histogram,
                                  make_ping_pong, pad_length)
+from repro.kernels.merge import (kway_merge_round, merge_path_partition,
+                                 num_merge_rounds)
 from repro.kernels.ops import (apply_run_copies, kernel_local_sort,
                                segmented_local_sort, tile_histogram_pass)
 
@@ -42,6 +70,7 @@ __all__ = [
     "bitonic_sort_rows", "bitonic_sort_rows_kv", "bitonic_sort_rows_stable",
     "assigned_histogram",
     "fused_counting_pass", "initial_histogram", "make_ping_pong", "pad_length",
+    "kway_merge_round", "merge_path_partition", "num_merge_rounds",
     "apply_run_copies", "kernel_local_sort", "segmented_local_sort",
     "tile_histogram_pass",
 ]

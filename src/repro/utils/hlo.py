@@ -175,6 +175,23 @@ def pallas_launch_count(jaxpr) -> int:
     return jaxpr_primitive_counts(jaxpr).get("pallas_call", 0)
 
 
+def launch_census(jaxpr) -> Dict[str, object]:
+    """One-call launch census: total ``pallas_call`` sites + per-while-body
+    counts.
+
+    The two structural invariants of the sort pipelines read straight off
+    this: the fused hybrid engine traces to ``{"total": 3, "while_bodies":
+    [1]}`` (prologue + ONE launch per counting pass + local sort), and every
+    out-of-core merge *round* — a host-driven jit with no device loop —
+    traces to ``{"total": 1, "while_bodies": []}``: one ``pallas_call`` per
+    round, ``⌈log_K(runs)⌉`` rounds per sort (§5).  Any binary-search loop
+    of the merge-path partition that traces as a while must stay launch-free
+    (a zero entry in ``while_bodies``).
+    """
+    return {"total": pallas_launch_count(jaxpr),
+            "while_bodies": while_body_pallas_launches(jaxpr)}
+
+
 def while_body_pallas_launches(jaxpr):
     """Launch sites inside each while-loop body, outermost-first.
 

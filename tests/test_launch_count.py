@@ -14,7 +14,10 @@ import jax.numpy as jnp
 import pytest
 
 from repro.core import SortConfig, hybrid_sort, lsd_sort, model
+from repro.core.outofcore import _sort_chunk, merge_round
 from repro.core.segmented import counting_partition
+from repro.kernels import merge as kmerge
+from repro.kernels.fused import pad_length
 from repro.utils import hlo
 
 TCFG = SortConfig(d=8, kpb=64, local_threshold=48, merge_threshold=32)
@@ -63,6 +66,41 @@ def test_jnp_engines_launch_free():
     for eng in ("argsort", "scan"):
         jx = jax.make_jaxpr(lambda a: hybrid_sort(a, cfg=TCFG, engine=eng))(x)
         assert hlo.pallas_launch_count(jx) == 0, eng
+
+
+def test_ooc_merge_one_launch_per_round():
+    """§5 census: EVERY merge round of an out-of-core sort — whatever the
+    run-length mix, group width, or leftover single-run group — is exactly
+    one pallas_call, so a full merge phase is ⌈log_K(runs)⌉ launches."""
+    tile = 64
+    lens = [256] * 8                       # 8 runs, kway=4 -> rounds of 2, 1
+    kway = 4
+    rounds = 0
+    while len(lens) > 1:
+        n = sum(lens)
+        ck = jnp.zeros((pad_length(n, tile),), jnp.uint32)
+        jx = jax.make_jaxpr(
+            lambda a, b: merge_round(a, (), b, (), lens=tuple(lens),
+                                     kway=kway, tile=tile, n=n,
+                                     interpret=True))(ck, jnp.zeros_like(ck))
+        census = hlo.launch_census(jx)
+        assert census["total"] == 1, lens
+        assert not any(census["while_bodies"]), lens
+        lens = [sum(g) for g in kmerge.merge_groups(lens, kway)]
+        rounds += 1
+    assert rounds == kmerge.num_merge_rounds(8, kway) == 2
+
+
+def test_ooc_chunk_sort_keeps_one_launch_per_pass():
+    """The PR 2 invariant under the new driver: an oocsort chunk sort on the
+    kernel engine still traces to one launch inside the pass loop, three
+    total (prologue + fused pass + local sort)."""
+    jx = jax.make_jaxpr(
+        lambda a: _sort_chunk(a, (), TCFG, "kernel", True))(
+            jnp.zeros(256, jnp.uint32))
+    assert hlo.while_body_pallas_launches(jx) == [1]
+    assert hlo.pallas_launch_count(jx) == 3
+    assert hlo.launch_census(jx) == {"total": 3, "while_bodies": [1]}
 
 
 def test_pallas_custom_call_counter_on_text():

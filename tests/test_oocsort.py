@@ -1,0 +1,243 @@
+"""Out-of-core parity wall: ``oocsort`` ≡ the argsort reference, bytewise.
+
+Correctness of the §5 pipeline spans launch boundaries — chunk sorts, the
+double-buffered staging, and ⌈log_K⌉ merge-kernel rounds — so the fence is a
+byte-identical comparison against the one-shot references across dtypes, KV
+payloads, and every chunk-boundary shape, plus the structural gates: the
+merge phase is comparison-sort-free and exactly ONE Pallas launch per round,
+and the chunk-sort loop keeps the PR 2 one-launch-per-pass invariant.
+
+Floats: the radix total order splits -0.0 < +0.0 (NaN payloads likewise), so
+float keys are byte-compared against ``hybrid_sort``'s argsort engine (the
+same total order) and semantically against ``np.sort``.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import SortConfig, hybrid_sort
+from repro.core.outofcore import (OocStats, _sort_chunk, merge_round, oocsort)
+from repro.kernels import merge as kmerge
+from repro.kernels.fused import pad_length
+from repro.utils import hlo
+from conftest import entropy_keys
+
+CHUNK = 256
+# small thresholds so kernel-engine chunk sorts exercise every phase
+TCFG = SortConfig(d=8, kpb=64, local_threshold=48, merge_threshold=32)
+
+
+def _reference(x):
+    """Byte-exact reference: the argsort-engine sort (radix total order)."""
+    return np.asarray(hybrid_sort(jnp.asarray(x)))
+
+
+def _keys(rng, dtype, n):
+    if dtype == np.float32:
+        x = (rng.standard_normal(n) * 1e3).astype(dtype)
+        if n >= 8:
+            x[:4] = [0.0, -0.0, np.inf, -np.inf]
+        return x
+    return entropy_keys(rng, n, 1, dtype=np.uint32).astype(dtype)
+
+
+# ---------------- keys parity across dtypes and chunk boundaries ------------
+
+@pytest.mark.parametrize("dtype", [np.uint32, np.int32, np.float32])
+@pytest.mark.parametrize(
+    "n", [0, 1, 100, CHUNK, CHUNK + 1, 8 * CHUNK, 8 * CHUNK + 1,
+          9 * CHUNK - 1],
+    ids=["empty", "one", "lt-chunk", "eq-chunk", "mod1", "mod0",
+         "8mod1", "modKm1"])
+def test_oocsort_keys_parity(rng, dtype, n):
+    x = _keys(rng, dtype, n)
+    out = oocsort(x, CHUNK, tile=32)
+    assert isinstance(out, np.ndarray) and out.dtype == x.dtype
+    assert np.array_equal(out, np.sort(x))
+    assert out.tobytes() == _reference(x).tobytes()
+
+
+def test_oocsort_uint64(rng):
+    from jax.experimental import enable_x64
+    with enable_x64():
+        x = entropy_keys(rng, 5 * CHUNK + 3, 2, dtype=np.uint64)
+        out = oocsort(x, CHUNK, tile=32)
+        assert np.array_equal(out, np.sort(x))
+        assert out.tobytes() == _reference(x).tobytes()
+
+
+def test_oocsort_duplicates_and_sentinel(rng):
+    for x in (np.zeros(1000, np.uint32),
+              np.full(1000, 0xFFFFFFFF, np.uint32),      # == pad sentinel
+              rng.integers(0, 8, 1500, dtype=np.uint32),
+              np.where(rng.random(2000) < 0.3, 0xFFFFFFFF,
+                       rng.integers(0, 2**32, 2000)).astype(np.uint32)):
+        out = oocsort(x, 300, tile=32, kway=3)
+        assert np.array_equal(out, np.sort(x))
+
+
+# ---------------- KV parity (the acceptance criterion) ----------------------
+
+def test_oocsort_kv_byte_identical_to_argsort_reference(rng):
+    """n = 8x chunk_elems with unique keys: keys AND values byte-identical to
+    the np.sort/np.argsort reference — the PR acceptance gate."""
+    n = 8 * CHUNK
+    x = rng.permutation(n).astype(np.uint32)            # unique keys
+    v = rng.integers(0, 2**31, n).astype(np.int32)
+    k, p = oocsort(x, CHUNK, values=np.arange(n, dtype=np.int32), tile=32)
+    assert k.tobytes() == np.sort(x).tobytes()
+    assert p.tobytes() == np.argsort(x, kind="stable").astype(
+        np.int32).tobytes()
+    k2, v2 = oocsort(x, CHUNK, values=v, tile=32)
+    assert k2.tobytes() == np.sort(x).tobytes()
+    assert v2.tobytes() == v[np.argsort(x, kind="stable")].tobytes()
+
+
+@pytest.mark.parametrize("n", [0, 1, 200, CHUNK, 3 * CHUNK + 1])
+def test_oocsort_kv_pair_consistency(rng, n):
+    """Duplicate keys: pair movement is consistent (values travel with their
+    keys) even where stability is not promised."""
+    x = entropy_keys(rng, n, 3)
+    v = np.arange(n, dtype=np.int32)
+    k, p = oocsort(x, CHUNK, values=v, tile=32)
+    assert np.array_equal(k, np.sort(x))
+    assert np.array_equal(x[p], k)                      # pair consistency
+    assert np.array_equal(np.sort(p), v)                # p is a permutation
+
+
+def test_oocsort_value_pytree(rng):
+    n = 3 * CHUNK
+    x = rng.permutation(n).astype(np.uint32)
+    vals = {"a": np.arange(n, dtype=np.int32),
+            "b": np.arange(n, dtype=np.float32) * 2.0}
+    k, out = oocsort(x, CHUNK, values=vals, tile=32)
+    order = np.argsort(x, kind="stable")
+    assert np.array_equal(k, np.sort(x))
+    assert np.array_equal(out["a"], vals["a"][order])
+    assert np.array_equal(out["b"], vals["b"][order])
+
+
+# ---------------- streaming readers and chunk plans -------------------------
+
+def test_oocsort_iterator_reader(rng):
+    pieces = [rng.integers(0, 2**32, m, dtype=np.uint32)
+              for m in (100, 700, 3, 0, 450)]
+    full = np.concatenate(pieces)
+    out = oocsort(iter(pieces), 256, tile=32)
+    assert np.array_equal(out, np.sort(full))
+
+
+def test_oocsort_iterator_kv_tuples(rng):
+    pieces, off = [], 0
+    for m in (300, 300, 123):
+        k = rng.integers(0, 2**32, m, dtype=np.uint32)
+        pieces.append((k, np.arange(off, off + m, dtype=np.int32)))
+        off += m
+    full = np.concatenate([k for k, _ in pieces])
+    k, p = oocsort(iter(pieces), 256, tile=32)
+    assert np.array_equal(k, np.sort(full))
+    assert np.array_equal(full[p], k)
+
+
+def test_oocsort_stats_and_round_count(rng):
+    x = rng.integers(0, 2**32, 8 * CHUNK, dtype=np.uint32)
+    for kway, rounds in ((2, 3), (4, 2), (8, 1)):
+        out, stats = oocsort(x, CHUNK, kway=kway, tile=32, return_stats=True)
+        assert np.array_equal(out, np.sort(x))
+        assert isinstance(stats, OocStats)
+        assert stats.num_chunks == 8
+        assert stats.merge_rounds == rounds == kmerge.num_merge_rounds(8, kway)
+        assert stats.h2d_bytes == x.nbytes and stats.d2h_bytes == x.nbytes
+
+
+def test_oocsort_engine_parity(rng):
+    """Chunked kernel-engine == chunked argsort-engine, byte for byte."""
+    x = entropy_keys(rng, 6 * CHUNK + 17, 2)
+    a = oocsort(x, CHUNK, cfg=TCFG, engine="argsort", tile=32)
+    k = oocsort(x, CHUNK, cfg=TCFG, engine="kernel", tile=32)
+    assert a.tobytes() == k.tobytes()
+    assert np.array_equal(a, np.sort(x))
+
+
+def test_oocsort_chunking_invariance(rng):
+    """The output is independent of the chunk plan (unique keys: bytewise)."""
+    n = 2048
+    x = rng.permutation(n).astype(np.uint32)
+    ref = oocsort(x, n, tile=32)                        # single run
+    for chunk in (100, 256, 1000):
+        assert oocsort(x, chunk, tile=32).tobytes() == ref.tobytes(), chunk
+
+
+def test_oocsort_validation(rng):
+    with pytest.raises(ValueError):
+        oocsort(np.zeros(4, np.uint32), 0)
+    with pytest.raises(ValueError):
+        oocsort(np.zeros(4, np.uint32), 4, kway=1)
+    with pytest.raises(ValueError):
+        oocsort(np.zeros((2, 2), np.uint32), 4)
+    with pytest.raises(ValueError):
+        oocsort(iter([np.zeros(4, np.uint32)]), 4,
+                values=np.zeros(4, np.int32))
+    with pytest.raises(ValueError):
+        oocsort(iter([]), 4)
+    with pytest.raises(ValueError, match="key dtype"):   # silent-promotion trap
+        oocsort(iter([np.zeros(4, np.uint32), np.zeros(4, np.int32)]), 4)
+    with pytest.raises(ValueError, match="value dtypes"):
+        oocsort(iter([(np.zeros(4, np.uint32), np.zeros(4, np.int32)),
+                      (np.zeros(4, np.uint32), np.zeros(4, np.int64))]), 4)
+    with pytest.raises(ValueError, match="1-D"):         # flat-slab contract
+        oocsort(np.zeros(4, np.uint32), 2,
+                values=np.ones((4, 3), np.float32))
+    if not jax.config.jax_enable_x64:  # no silent payload truncation
+        with pytest.raises(RuntimeError, match="64-bit value"):
+            oocsort(np.zeros(4, np.uint32), 2,
+                    values=np.arange(4, dtype=np.int64))
+
+
+def test_length_bucketing_ooc_route(rng):
+    """data.pipeline routes shard-sized corpora through oocsort: same packing
+    contract as the LSD path."""
+    from repro.data import length_bucketed_batches
+    lengths = rng.integers(1, 512, 600)
+    order, bounds = length_bucketed_batches(lengths, batch_tokens=4096,
+                                            ooc_chunk_elems=128)
+    ref_order, ref_bounds = length_bucketed_batches(lengths,
+                                                    batch_tokens=4096)
+    assert sorted(order.tolist()) == list(range(600))
+    sl = lengths[order]
+    assert (np.diff(sl) >= 0).all()
+    assert bounds == ref_bounds
+    assert np.array_equal(sl, lengths[ref_order])
+    for a, b in zip(bounds[:-1], bounds[1:]):
+        assert sl[a:b].max() * (b - a) <= 4096
+
+
+# ---------------- structural gates (acceptance criteria) --------------------
+
+def _merge_round_jaxpr(lens, kway, tile, num_vals=0):
+    n = sum(lens)
+    n_pad = pad_length(n, tile)
+    ck = jnp.zeros((n_pad,), jnp.uint32)
+    cv = tuple(jnp.zeros((n_pad,), jnp.int32) for _ in range(num_vals))
+    f = lambda a, b: merge_round(a, cv, b, tuple(jnp.zeros_like(v)
+                                                 for v in cv),
+                                 lens=tuple(lens), kway=kway, tile=tile, n=n,
+                                 interpret=True)
+    return f, ck, jnp.zeros_like(ck)
+
+
+def test_merge_phase_is_comparison_sort_free():
+    """utils.hlo.sort_op_count == 0 over the whole merge phase: the diagonal
+    partition is binary search, the tile merge a counting rank."""
+    for lens in ((256, 256, 256, 256), (256, 100), (300, 300, 300, 300, 17)):
+        f, ck, ak = _merge_round_jaxpr(lens, kway=4, tile=64)
+        assert hlo.sort_op_count(jax.jit(f).lower(ck, ak).as_text()) == 0, lens
+
+
+def test_merge_round_single_launch_with_values():
+    f, ck, ak = _merge_round_jaxpr((256, 256, 256), kway=4, tile=64,
+                                   num_vals=2)
+    jx = jax.make_jaxpr(f)(ck, ak)
+    assert hlo.pallas_launch_count(jx) == 1
+    assert hlo.launch_census(jx)["total"] == 1

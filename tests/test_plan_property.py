@@ -1,0 +1,220 @@
+"""Property tests for ``core.plan`` — the invariants every engine leans on.
+
+PR 2 made ``core.plan`` the single partition-plan layer under the hybrid/LSD
+drivers, MoE dispatch and the data pipeline, but its invariants were only
+tested *indirectly* (via engine parity).  The out-of-core driver now also
+trusts them across launch boundaries, so they get their own wall:
+
+  * ``make_region_blocks``: the block descriptors cover every key position
+    exactly once — active segments are partitioned (each by its own blocks,
+    exactly once, with carry resets on region starts), the done gaps between
+    them are skipped by the partition and covered by copy-through blocks,
+  * ``next_active_table``: the compact-row map is a bijection from the > ∂̂
+    sub-buckets onto the next pass's active rows 0..m-1, in position order,
+  * ``merge_rows`` (R3): zero sub-buckets never open a group, > ∂̂
+    sub-buckets always stand alone, merged groups stay below ∂, and the
+    merged-group destination offsets are monotone.
+
+Hypothesis drives random states when available; a deterministic sweep covers
+the same ground on bare interpreters (the repo-wide guard idiom).
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+try:  # hypothesis is an optional test dependency (see pyproject.toml)
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised on bare interpreters
+    HAVE_HYPOTHESIS = False
+
+from repro.core import plan
+
+
+# --------------------------- state generators -------------------------------
+
+def random_bucket_state(rng, n, max_segments):
+    """Dense (seg_id, done) per-key state as the drivers carry it: segment
+    ids non-decreasing from 0, done constant within a segment."""
+    nseg = int(rng.integers(1, max_segments + 1))
+    cuts = np.sort(rng.choice(np.arange(1, n), size=min(nseg - 1, n - 1),
+                              replace=False)) if n > 1 else np.array([], int)
+    seg_id = np.zeros(n, np.int32)
+    seg_id[cuts] = 1
+    seg_id = np.cumsum(seg_id).astype(np.int32)
+    seg_done = rng.random(seg_id[-1] + 1) < 0.5 if n else np.array([], bool)
+    done = seg_done[seg_id] if n else np.zeros(0, bool)
+    return seg_id, done
+
+
+def check_region_blocks(seg_id, done, kpb):
+    """Assert the full coverage contract of ``make_region_blocks``."""
+    n = seg_id.shape[0]
+    nseg = int(seg_id[-1]) + 1 if n else 0
+    a_max = max(1, nseg)
+    asegs = plan.active_segments(jnp.asarray(seg_id), jnp.asarray(done),
+                                 a_max)
+    g_max = plan.max_region_blocks(n, kpb, a_max)
+    blocks = plan.make_region_blocks(asegs.base, asegs.size, n, kpb, g_max)
+    seg, off, reset, cnt, act = (np.asarray(x) for x in blocks)
+
+    assert seg.shape == (g_max,)
+    assert int(cnt.sum()) == n
+
+    # exactly-once coverage of every key position
+    cover = np.zeros(n, np.int32)
+    for o, c in zip(off, cnt):
+        assert c >= 0 and (c == 0 or (0 <= o and o + c <= n))
+        cover[o:o + c] += 1
+    assert (cover == 1).all()
+
+    # partition blocks cover exactly the active keys of their own segment;
+    # copy-through blocks cover exactly the done gaps (gap-skipping)
+    base = np.asarray(asegs.base)
+    size = np.asarray(asegs.size)
+    for s, o, c, a in zip(seg, off, cnt, act):
+        if c == 0:
+            continue
+        if a == 1:
+            assert s < a_max
+            assert base[s] <= o and o + c <= base[s] + size[s]
+            assert not done[o:o + c].any()
+            assert (seg_id[o:o + c] == seg_id[o]).all()
+        else:
+            assert s == a_max
+            assert done[o:o + c].all()
+
+    # per active segment: its blocks tile [base, base+size) in order, carry
+    # reset set on the first block only
+    for i in range(a_max):
+        if size[i] == 0:
+            continue
+        mine = [(o, c, r) for s, o, c, r, a in
+                zip(seg, off, cnt, reset, act) if a == 1 and s == i and c]
+        mine.sort()
+        expect = int(base[i])
+        for j, (o, c, r) in enumerate(mine):
+            assert o == expect
+            assert r == (1 if j == 0 else 0)
+            expect += c
+        assert expect == int(base[i]) + int(size[i])
+
+
+def replay_merge_rows(row, local_threshold, merge_threshold):
+    """Straight-line numpy oracle of the R3 scan in ``plan.merge_rows``."""
+    acc = merge_threshold
+    gstart, gdone = [], []
+    for s in row:
+        big = s > local_threshold
+        extend = (s == 0) or ((not big) and (acc + s < merge_threshold))
+        acc = acc + s if extend else (merge_threshold if big else s)
+        gstart.append(not extend)
+        gdone.append(not big)
+    return np.array(gstart), np.array(gdone)
+
+
+def check_merge_rows(hist, local_threshold, merge_threshold):
+    gstart, gdone = (np.asarray(x) for x in plan.merge_rows(
+        jnp.asarray(hist), local_threshold, merge_threshold))
+    for row, gs, gd in zip(hist, gstart, gdone):
+        ref_gs, ref_gd = replay_merge_rows(row, local_threshold,
+                                           merge_threshold)
+        assert (gs == ref_gs).all() and (gd == ref_gd).all()
+
+        # R3 invariants
+        assert not gs[row == 0].any()                # zeros never open groups
+        big = row > local_threshold
+        assert gs[big].all()                         # big buckets stand alone
+        assert not gd[big].any()
+        nz = row > 0
+        if nz.any():
+            assert gs[np.argmax(nz)]                 # first nonzero opens one
+        # merged groups (>= 2 nonzero members) stay below ∂ and are done
+        gid = np.cumsum(gs) - 1
+        excl = np.cumsum(row) - row                  # destination offsets
+        group_offsets = []
+        for g in range(gid.max() + 1 if len(row) else 0):
+            members = nz & (gid == g)
+            if members.sum() >= 2:
+                assert row[members].sum() < merge_threshold
+                assert gd[members].all()
+            if members.any():
+                group_offsets.append(excl[np.argmax(members)])
+        # merged R3 offsets are monotone (strictly: every group is nonempty)
+        assert (np.diff(group_offsets) > 0).all()
+
+
+def check_next_active_table(hist, local_threshold):
+    a_max = hist.shape[0]
+    table = np.asarray(plan.next_active_table(jnp.asarray(hist),
+                                              local_threshold, a_max))
+    mask = (hist > local_threshold).reshape(-1)
+    # bijection onto 0..m-1 in position order over the active rows...
+    assert (table[mask] == np.arange(mask.sum())).all()
+    # ...and the sentinel a_max everywhere else
+    assert (table[~mask] == a_max).all()
+
+
+# --------------------------- hypothesis drivers -----------------------------
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=40, deadline=None)
+    @given(st.integers(0, 2**32 - 1), st.integers(1, 300),
+           st.sampled_from([8, 16, 64]), st.integers(1, 12))
+    def test_region_blocks_property(seed, n, kpb, max_segments):
+        rng = np.random.default_rng(seed)
+        seg_id, done = random_bucket_state(rng, n, max_segments)
+        check_region_blocks(seg_id, done, kpb)
+
+    @settings(max_examples=40, deadline=None)
+    @given(st.integers(0, 2**32 - 1), st.integers(1, 6),
+           st.sampled_from([4, 16]), st.integers(2, 40))
+    def test_merge_rows_property(seed, a, r, local_threshold):
+        rng = np.random.default_rng(seed)
+        merge_threshold = int(rng.integers(1, local_threshold + 1))
+        hist = rng.integers(0, 3 * local_threshold, (a, r)).astype(np.int32)
+        hist[rng.random((a, r)) < 0.4] = 0
+        check_merge_rows(hist, local_threshold, merge_threshold)
+
+    @settings(max_examples=40, deadline=None)
+    @given(st.integers(0, 2**32 - 1), st.integers(1, 8),
+           st.sampled_from([4, 16]), st.integers(1, 40))
+    def test_next_active_table_property(seed, a, r, local_threshold):
+        rng = np.random.default_rng(seed)
+        hist = rng.integers(0, 3 * local_threshold, (a, r)).astype(np.int32)
+        check_next_active_table(hist, local_threshold)
+
+
+# ------- deterministic sweep: runs with or without hypothesis ---------------
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+@pytest.mark.parametrize("kpb", [8, 64])
+def test_region_blocks_sweep(seed, kpb):
+    rng = np.random.default_rng(seed)
+    for n in (1, 2, kpb - 1, kpb, kpb + 1, 257):
+        seg_id, done = random_bucket_state(rng, n, 8)
+        check_region_blocks(seg_id, done, kpb)
+
+
+def test_region_blocks_all_done_and_all_active(rng):
+    n = 100
+    check_region_blocks(np.zeros(n, np.int32), np.ones(n, bool), 16)
+    check_region_blocks(np.zeros(n, np.int32), np.zeros(n, bool), 16)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_merge_rows_sweep(seed):
+    rng = np.random.default_rng(seed)
+    hist = rng.integers(0, 96, (4, 16)).astype(np.int32)
+    hist[rng.random((4, 16)) < 0.4] = 0
+    check_merge_rows(hist, 32, 24)
+    check_merge_rows(np.zeros((2, 8), np.int32), 32, 24)
+    check_merge_rows(np.full((1, 8), 100, np.int32), 32, 24)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_next_active_table_sweep(seed):
+    rng = np.random.default_rng(seed)
+    check_next_active_table(rng.integers(0, 96, (6, 16)).astype(np.int32), 32)
+    check_next_active_table(np.zeros((3, 4), np.int32), 32)
+    check_next_active_table(np.full((3, 4), 100, np.int32), 32)
