@@ -13,10 +13,18 @@ interpret-mode overhead dominates, so the tracked §5 roofline proxy is the
 ratio trajectory plus the structural gates (one launch per merge round,
 sort-free merge) enforced by the test wall.
 
+``--spill`` adds the host-spill sweep: ``spill/...`` rows time the
+**streamed merge** (host-resident runs through budget-bounded device slabs,
+``/spill``) against the **device-resident merge** (``/device``) and the
+one-shot ``/argsort`` baseline over the same distributions — both pipeline
+rows share argsort-engine chunk sorts so the delta isolates the merge
+regime.  ``engines.annotate`` attaches ``ratios/...`` and ``notes`` for each
+contender, the same self-interpretation contract.
+
 Every row draws its keys from an explicit per-row seed
 (``data.distributions``), so rows replay bit-identically in isolation.
 
-``python -m benchmarks.run --json --ooc`` writes BENCH_ooc.json.
+``python -m benchmarks.run --json --ooc [--spill]`` writes BENCH_ooc.json.
 """
 from __future__ import annotations
 
@@ -71,8 +79,41 @@ def collect(fast: bool = True, smoke: bool = False) -> dict:
     return annotate(out, contender="ooc-argsort")
 
 
-def main(fast: bool = True, smoke: bool = False) -> dict:
+def collect_spill(fast: bool = True, smoke: bool = False) -> dict:
+    """Streamed (host-spill) merge vs device-resident merge vs argsort."""
+    if smoke:
+        cases = [(1 << 10, 1 << 8, 1 << 7)]            # n, chunk, slab
+        dists = ("uniform",)
+    elif fast:
+        cases = [(1 << 12, 1 << 9, 1 << 7), (1 << 14, 1 << 11, 1 << 9)]
+        dists = ("uniform", "zipf", "clustered")
+    else:
+        cases = [(1 << 16, 1 << 13, 1 << 11), (1 << 18, 1 << 15, 1 << 12)]
+        dists = ("uniform", "zipf", "clustered")
+    out = {}
+    for seed, (n, chunk, slab) in enumerate(cases):
+        for dist in dists:
+            x = DISTS[dist](seed, n)
+            stem = f"spill/sort/n={n}/chunks={n // chunk}/slab={slab}/{dist}"
+            out[f"{stem}/argsort"] = timeit(one_shot_argsort, x) * 1e6
+            out[f"{stem}/device"] = timeit(
+                lambda a: oocsort(a, chunk, engine="argsort", kway=KWAY,
+                                  tile=TILE), x) * 1e6
+            out[f"{stem}/spill"] = timeit(
+                lambda a: oocsort(a, chunk, engine="argsort", kway=KWAY,
+                                  tile=TILE, device_slab_elems=slab),
+                x) * 1e6
+    out = annotate(out, contender="spill")
+    return annotate(out, contender="device")
+
+
+def main(fast: bool = True, smoke: bool = False, spill: bool = False) -> dict:
     rows = collect(fast, smoke=smoke)
+    if spill:
+        srows = collect_spill(fast, smoke=smoke)
+        notes = rows.pop("notes", []) + srows.pop("notes", [])
+        rows.update(srows)
+        rows["notes"] = notes
     for name, us in rows.items():
         if name == "notes":
             continue

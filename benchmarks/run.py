@@ -14,10 +14,12 @@ kernel engine regresses below the argsort baseline.
 ``--ooc`` adds the §5 out-of-core sweep (chunked kernel-engine pipeline +
 streaming k-way merge vs one-shot argsort, ``benchmarks.ooc``); with
 ``--json PATH`` its rows land in ``BENCH_ooc.json`` next to PATH, carrying
-the same ``ratios/...`` + ``notes`` contract.
+the same ``ratios/...`` + ``notes`` contract.  ``--spill`` extends the ooc
+sweep with the host-spill regime rows (streamed merge through bounded
+device slabs vs device-resident merge vs one-shot argsort).
 
 ``python -m benchmarks.run [--full] [--smoke] [--only fig6,...]
-                           [--json [PATH]] [--ooc]``
+                           [--json [PATH]] [--ooc] [--spill]``
 """
 from __future__ import annotations
 
@@ -44,7 +46,11 @@ def main() -> None:
                     help="write the engine-sweep rows to PATH as JSON")
     ap.add_argument("--ooc", action="store_true",
                     help="also run the out-of-core sweep (BENCH_ooc.json)")
+    ap.add_argument("--spill", action="store_true",
+                    help="with --ooc: add the host-spill streamed-merge rows")
     args = ap.parse_args()
+    if args.spill and not args.ooc:
+        ap.error("--spill extends the out-of-core sweep: pass --ooc too")
     only = args.only.split(",") if args.only else None
     if args.smoke and only is None:
         only = ["engines"]               # smoke: the acceptance-gated sweep
@@ -79,7 +85,8 @@ def main() -> None:
 
     if args.ooc:
         from benchmarks import ooc
-        rows = ooc.main(fast=not args.full, smoke=args.smoke)
+        rows = ooc.main(fast=not args.full, smoke=args.smoke,
+                        spill=args.spill)
         if args.json is not None:
             dump(rows, os.path.join(os.path.dirname(args.json) or ".",
                                     "BENCH_ooc.json"))

@@ -1,21 +1,67 @@
 #!/usr/bin/env bash
-# CI entry point: tier-1 pytest + an interpret-mode benchmark smoke pass.
+# CI entry point, staged so the verify loop stays usable:
+#
+#   scripts/ci.sh fast   — fast tier-1 stage only: pytest -m "not slow"
+#                          (the sub-10-minute loop; no benchmarks)
+#   scripts/ci.sh slow   — the slow-marked suites (hypothesis-heavy property
+#                          walls, large-n sweeps, multi-device subprocess
+#                          tests) + the interpret-mode benchmark smoke pass;
+#                          pairs with a separate `fast` job so CI never runs
+#                          the fast tier twice
+#   scripts/ci.sh [full] — both stages back to back (the one-stop local
+#                          verify entry point)
 #
 # Everything runs on a plain CPU host: the Pallas kernels execute in
 # interpret mode (the drivers default to it off-TPU), so the fused-engine
 # parity and launch-count gates are exercised on every push without TPU
-# hardware.  Usage: scripts/ci.sh [extra pytest args...]
+# hardware.  Extra args after the stage name pass through to pytest.
 set -euo pipefail
 cd "$(dirname "$0")/.."
+
+STAGE="${1:-full}"
+if [[ "$STAGE" == "fast" || "$STAGE" == "slow" || "$STAGE" == "full" ]]; then
+  if [[ $# -gt 0 ]]; then shift; fi
+else
+  STAGE="full"
+fi
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 
-echo "=== tier-1 tests ==="
-python -m pytest -q "$@"
+# a stage whose marker filter plus user-supplied pass-through args (-k ...)
+# collects zero tests exits 5; that is fine for a tier, not a failure of the
+# script.  Without pass-through args an empty tier means the marker setup is
+# broken and must stay fatal.
+PASSTHROUGH=$#
+run_stage() {
+  local rc=0
+  python -m pytest -q "$@" || rc=$?
+  if [[ $rc -eq 5 && $PASSTHROUGH -gt 0 ]]; then
+    echo "WARNING: this stage collected 0 tests (tolerated: pass-through" \
+         "args may filter out an entire tier)"
+    rc=0
+  fi
+  if [[ $rc -ne 0 ]]; then
+    exit "$rc"
+  fi
+}
 
-echo "=== benchmark smoke (interpret mode, engine + out-of-core sweeps) ==="
-python -m benchmarks.run --json BENCH_smoke.json --smoke --ooc
+if [[ "$STAGE" != "slow" ]]; then
+  echo "=== tier-1 tests (fast stage: -m 'not slow') ==="
+  run_stage -m "not slow" "$@"
+fi
+
+if [[ "$STAGE" == "fast" ]]; then
+  exit 0
+fi
+
+# smoke benches run BEFORE the slow suite so the BENCH artifacts exist even
+# when a slow test fails (the upload step runs if: always())
+echo "=== benchmark smoke (interpret mode, engine + out-of-core + spill) ==="
+python -m benchmarks.run --json BENCH_smoke.json --smoke --ooc --spill
+
+echo "=== tier-1 tests (slow stage: -m slow) ==="
+run_stage -m "slow" "$@"
 
 echo "=== smoke bench notes ==="
 python - <<'EOF'
@@ -26,3 +72,4 @@ for path in ("BENCH_smoke.json", "BENCH_ooc.json"):
         print(f"WARNING [{path}]:", note)
     print(f"{path} rows:", sum(1 for k in rows if k != "notes"))
 EOF
+

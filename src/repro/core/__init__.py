@@ -8,9 +8,12 @@ Public API:
   segmented_sort     — batched independent sorts
   distributed_sort   — §5: multi-chip pipelined sort (shard_map)
   oocsort            — §5: out-of-core pipelined sort (chunked device runs
-                       under double-buffered staging + streaming k-way merge)
+                       under double-buffered staging + streaming k-way
+                       merge; spill_budget_bytes bounds device memory by
+                       streaming host-resident runs through device slabs)
 """
-from repro.core.bijection import to_ordered_bits, from_ordered_bits, key_bits
+from repro.core.bijection import (to_ordered_bits, from_ordered_bits,
+                                  from_ordered_bits_np, key_bits)
 from repro.core.hybrid import hybrid_sort, SortStats
 from repro.core.lsd import lsd_sort
 from repro.core.model import (SortConfig, default_config, memory_budget,
@@ -21,7 +24,8 @@ from repro.core.ranks import ENGINES, resolve_engine
 __all__ = [
     "hybrid_sort", "lsd_sort", "SortStats", "SortConfig", "default_config",
     "memory_budget", "pass_counts", "expected_speedup",
-    "to_ordered_bits", "from_ordered_bits", "key_bits",
+    "to_ordered_bits", "from_ordered_bits", "from_ordered_bits_np",
+    "key_bits",
     "oocsort", "OocStats",
     "ENGINES", "resolve_engine",
 ]

@@ -14,6 +14,7 @@ All functions are jit-safe and shape-preserving.
 from __future__ import annotations
 
 import jax.numpy as jnp
+import numpy as np
 
 # dtype -> (unsigned carrier dtype, key bit width)
 _CARRIER = {
@@ -76,4 +77,24 @@ def from_ordered_bits(ubits: jnp.ndarray, dtype) -> jnp.ndarray:
         return (ubits ^ sign).view(dt)
     was_neg = (ubits & sign) == 0  # encoded negatives have sign bit cleared
     bits = jnp.where(was_neg, ~ubits, ubits ^ sign)
+    return bits.view(dt)
+
+
+def from_ordered_bits_np(ubits: np.ndarray, dtype) -> np.ndarray:
+    """NumPy mirror of :func:`from_ordered_bits` for host-resident bits.
+
+    The out-of-core spill path keeps merged runs host-side, so the final
+    unsigned-bits -> key-dtype inverse must not round-trip N bytes through
+    the device just to flip sign bits; this is the same bijection on numpy.
+    """
+    dt = np.dtype(dtype)
+    udt = np.dtype(carrier_dtype(dtype))
+    ubits = np.asarray(ubits).astype(udt, copy=False)
+    if np.issubdtype(dt, np.unsignedinteger):
+        return ubits.astype(dt, copy=False)
+    sign = udt.type(1 << (np.iinfo(udt).bits - 1))
+    if np.issubdtype(dt, np.signedinteger):
+        return (ubits ^ sign).view(dt)
+    was_neg = (ubits & sign) == 0  # encoded negatives have sign bit cleared
+    bits = np.where(was_neg, ~ubits, ubits ^ sign)
     return bits.view(dt)

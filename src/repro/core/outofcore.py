@@ -4,12 +4,8 @@ The paper's second headline (§5, the 64 GB end-to-end result) sorts inputs
 that exceed device memory with a chunk-sort-then-merge pipeline: the host
 array streams to the device in chunks, every chunk is sorted on-device while
 the next chunk's transfer is in flight, and the sorted runs are merged by a
-device merge kernel.  ``oocsort`` is that pipeline in JAX terms — the
-*sort* phase works in chunk-sized device buffers; the merge phase currently
-keeps the full flat run buffer on device (one launch per round over every
-group), so true beyond-device-memory capacity waits on the host-spill
-streaming of group-sized merge slabs (ROADMAP open item).  The pipeline
-structure, accounting and census are the §5 shape:
+device merge kernel.  ``oocsort`` is that pipeline in JAX terms, in two
+device-memory regimes:
 
   1. the host-resident input (array or chunk iterator) is re-chunked into
      runs of ``chunk_elems`` keys (+ value slabs),
@@ -19,28 +15,46 @@ structure, accounting and census are the §5 shape:
   3. each chunk is sorted by ``hybrid_sort`` — the fused single-launch
      counting-pass engine on donated ping-pong buffers (PR 1–2) — and mapped
      to order-preserving unsigned bits so runs merge bitwise,
-  4. ⌈log_K(runs)⌉ rounds of the merge-path kernel
-     (``kernels.merge.kway_merge_round``) fuse K adjacent runs per group,
-     ONE Pallas launch per round, ping-pong buffers donated between rounds,
-  5. the merged keys map back to the key dtype and land on the host.
+  4. **device-resident merge** (default): ⌈log_K(runs)⌉ rounds of the
+     merge-path kernel (``kernels.merge.kway_merge_round``) fuse K adjacent
+     runs per group, ONE Pallas launch per round, ping-pong buffers donated
+     between rounds — the whole flat run buffer lives on device,
+  5. **host-spill streaming merge** (``spill_budget_bytes`` /
+     ``device_slab_elems``): runs live *host-side* between rounds and every
+     round streams its groups through a bounded handful of slab-sized
+     device buffers (double-buffered sources, alternates and descriptor
+     tables — ``_SLAB_FOOTPRINT`` models the worst case).  The
+     merge-path co-ranks are computed from O(bits·K·log L) probed host
+     elements per diagonal (``kernels.merge.host_coranks``), each group is cut into slab-sized
+     strips of whole output tiles (``kernels.merge.spill_group_plan``), and
+     strip i+1's ``device_put`` upload plus strip i−1's download are in
+     flight while strip i's ``kway_merge_round`` launch runs — the chunk
+     phase's double-buffering discipline extended with D2H, ONE Pallas
+     launch per group-slab sweep.  Device memory stays bounded by the slab
+     budget no matter how large the input,
+  6. the merged keys map back to the key dtype and land on the host (the
+     spill path inverts the bit bijection in numpy — no extra device trip).
 
-Transfer accounting (§5): every key crosses the host link exactly twice
-(staged in chunks overlapped with compute, gathered once at the end), and
-device memory sweeps total ``(2·⌈k/d⌉ + 1)`` for the chunk sorts (§4.3/§4.4
-accounting at chunk size), plus one run-marshalling sweep (1R + 2W:
-concatenating the sorted runs into the flat merge buffer and allocating its
-sentinel-filled alternate), plus ``2·⌈log_K(C)⌉`` for the merge rounds —
-the table in ``repro.kernels``'s docstring.
+Transfer accounting (§5, the table in ``repro.kernels``'s docstring): in the
+device-resident regime every key crosses the host link exactly twice; in the
+spill regime the chunk phase still crosses twice (staged up overlapped with
+compute, runs gathered down overlapped with the next sort) and every spilled
+merge round adds one up + one down crossing per key — ``2·N·b·(1 +
+rounds_spilled)`` total, with leftover single-run groups carried host-side
+for free.  ``OocStats`` reports the per-phase link bytes and the driver's
+device high-water mark (``device_high_water_bytes``), the gate that fails if
+anyone re-materialises full runs on device.
 
-Determinism: the merge breaks ties by (key, run, position), so runs of equal
-keys keep chunk order and the output is a pure function of the input stream
-and the chunking — byte-identical across engines, certified by the oocsort
-parity wall.
+Determinism: the merge breaks ties by (key, run, position) — in both
+regimes, with strip boundaries cutting the *same* merge path the device
+partition would — so runs of equal keys keep chunk order and the output is a
+pure function of the input stream and the chunking — byte-identical across
+engines and regimes, certified by the oocsort parity wall.
 """
 from __future__ import annotations
 
 import functools
-from typing import Any, Iterable, NamedTuple, Optional
+from typing import Any, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -48,16 +62,97 @@ import numpy as np
 
 from repro.core import bijection, model
 from repro.core.hybrid import hybrid_sort
+from repro.core.ranks import resolve_engine
 from repro.kernels import merge as kmerge
 from repro.kernels.fused import pad_length
+
+# Modeled peak device working set, in units of one chunk / one slab payload.
+# Chunk phase: staged chunks i and i+1, the sort's ping-pong pair (2x), the
+# sorted run i, plus (spill) run i-1 with its working set still in flight —
+# the ledger peaks under 10x one chunk's bytes, and the spill clamp starts
+# from this reservation (then checks the engine-aware model below):
+_CHUNK_FOOTPRINT = 12
+
+
+def _chunk_working_bytes(chunk_elems: int, elem_bytes: int, cfg, engine,
+                         key_dtype) -> int:
+    """Modeled device working set of one chunk sort (its ping-pong pair).
+
+    The kernel engine's donated ping-pong buffers are ``pad_length(n, kpb)``
+    long — whole KPB tiles plus a spare — which dwarfs the raw chunk bytes
+    for small chunks under a large ``kpb``; the jnp engines work in n-sized
+    buffers.  Mirrors ``hybrid_sort``'s cfg/engine resolution so the spill
+    budget clamp and the ledger charge what the sort actually allocates.
+    """
+    if resolve_engine(engine) == "kernel":
+        kpb = (cfg or model.default_config(
+            bijection.key_bits(key_dtype) // 8)).kpb
+        return 2 * pad_length(chunk_elems, kpb) * elem_bytes
+    return 2 * chunk_elems * elem_bytes
+
+
+def _chunk_peak_bytes(chunk_elems: int, elem_bytes: int, cfg, engine,
+                      key_dtype) -> int:
+    """Modeled chunk-phase peak: staged chunks i-1/i/i+1, sorted runs i-1/i,
+    and two sort working sets in flight (the spill pipeline's worst case)."""
+    return 5 * chunk_elems * elem_bytes + 2 * _chunk_working_bytes(
+        chunk_elems, elem_bytes, cfg, engine, key_dtype)
+# Spill merge phase: padded source slabs and alternate slabs for strips i-1,
+# i and i+1 plus one exact upload in transit — under 7x one padded slab; the
+# slab derivation starts from this reservation and then shrinks the slab
+# until the modeled worst case (_spill_peak_bytes, which also counts the
+# pad tile and the scalar-prefetch tables the reservation alone misses at
+# small budgets) provably fits:
+_SLAB_FOOTPRINT = 10
+
+
+def _spill_peak_bytes(slab: int, tile: int, elem_bytes: int,
+                      kway: int) -> int:
+    """Modeled worst-case live device bytes of the strip stream.
+
+    Dominates the ledger's peak: at most 5 padded slabs live at once (source
+    and alternate for strips i-1 and i, plus strip i+1's source) — modeled
+    as 6 — plus strip i+1's exact upload still in transit and three strips'
+    scalar-prefetch table sets.
+    """
+    bufsize = slab + tile                       # pad_length for tile-aligned
+    g = slab // tile
+    table_bytes = (2 * g + 2 * g * kway) * np.dtype(np.int32).itemsize
+    return (6 * bufsize + slab) * elem_bytes + 3 * table_bytes
 
 
 class OocStats(NamedTuple):
     num_chunks: int      # sorted device runs the input was split into
     merge_rounds: int    # ⌈log_kway(num_chunks)⌉ merge-kernel rounds
     chunk_elems: int     # device chunk capacity the plan used
-    h2d_bytes: int       # host->device bytes staged (keys + values)
-    d2h_bytes: int       # device->host bytes gathered at the end
+    h2d_bytes: int       # host->device payload bytes (keys + values)
+    d2h_bytes: int       # device->host payload bytes (keys + values)
+    device_high_water_bytes: int = 0   # driver's modeled peak device bytes
+    chunk_link_bytes: int = 0   # chunk-phase crossings: 2·N·(b+v)
+    spill_link_bytes: int = 0   # spill-round crossings: +2·N·(b+v) per round
+    rounds_spilled: int = 0     # rounds streamed through host-side runs
+    spill_slab_elems: int = 0   # device slab capacity (0: device-resident)
+
+
+class _DeviceLedger:
+    """Driver-side model of live device bytes (the high-water gate).
+
+    Tracks the buffers the oocsort driver itself stages, allocates and
+    releases (chunks, sort working sets, runs, slabs); the high-water mark is
+    what the spill regression test pins under ``spill_budget_bytes``, so any
+    change that re-materialises O(N) on device blows it up.
+    """
+
+    def __init__(self):
+        self.live = 0
+        self.high = 0
+
+    def alloc(self, nbytes: int) -> None:
+        self.live += int(nbytes)
+        self.high = max(self.high, self.live)
+
+    def free(self, nbytes: int) -> None:
+        self.live -= int(nbytes)
 
 
 def _as_stream(reader, values):
@@ -135,6 +230,20 @@ def _rechunk(stream, chunk_elems: int):
     return chunks, treedef, key_dtype, empty_leaves
 
 
+def _split_chunks(chunks, chunk_elems: int):
+    """Re-split host chunks to a smaller capacity (spill-budget clamp)."""
+    out = []
+    for k, vs in chunks:
+        for o in range(0, k.shape[0], chunk_elems):
+            out.append((k[o:o + chunk_elems],
+                        tuple(v[o:o + chunk_elems] for v in vs)))
+    return out
+
+
+def _chunk_nbytes(chunk) -> int:
+    return chunk[0].nbytes + sum(v.nbytes for v in chunk[1])
+
+
 @functools.partial(jax.jit, static_argnames=("cfg", "engine", "interpret"))
 def _sort_chunk(keys, leaves, cfg, engine, interpret):
     """Sort one staged chunk; emit the run as order-preserving unsigned bits."""
@@ -166,10 +275,126 @@ def merge_round(src_keys, src_vals, alt_keys, alt_vals, *, lens, kway: int,
                                    interpret=interpret)
 
 
+class _Job(NamedTuple):
+    """One slab strip of one merge group, with its host source/target runs."""
+    strip: kmerge.SpillStrip
+    kruns: list           # host key runs of the group (np, unsigned bits)
+    vruns: list           # host value runs: per run a tuple of leaves
+    mk: np.ndarray        # merged host key run being assembled
+    mv: Tuple[np.ndarray, ...]
+
+
+def _spill_merge(keys_h, vals_h, *, kway: int, tile: int, slab: int,
+                 interpret: bool, ledger: _DeviceLedger):
+    """Host-spilled merge rounds: stream every group through device slabs.
+
+    ``keys_h``/``vals_h`` are the host-resident sorted runs (unsigned bits).
+    Each round plans slab-sized strips for every multi-run group
+    (single-run leftovers carry over host-side for free), then streams the
+    strip list with the chunk phase's double-buffering discipline extended
+    with D2H: strip i+1's upload and strip i−1's download are in flight
+    while strip i's ``kway_merge_round`` launch runs.  Returns the final
+    ``(keys, values, rounds, up_bytes, down_bytes)``; the device footprint
+    never exceeds a handful of slabs (see ``_SLAB_FOOTPRINT``), which is
+    what makes the §5 beyond-device-memory claim literal.
+    """
+    udtype = keys_h[0].dtype
+    sentinel = udtype.type(~np.zeros((), udtype))
+    bufsize = pad_length(slab, tile)
+    up_total = down_total = 0
+    rounds = 0
+
+    def stage(job):
+        nonlocal up_total
+        strip, kruns, vruns = job.strip, job.kruns, job.vruns
+        K = len(kruns)
+        wins = [slice(strip.win_lo[r], strip.win_lo[r] + strip.win_len[r])
+                for r in range(K)]
+        up_k = np.concatenate([kruns[r][wins[r]] for r in range(K)])
+        up_v = tuple(np.concatenate([vruns[r][li][wins[r]]
+                                     for r in range(K)])
+                     for li in range(len(vruns[0])))
+        dev_k = jax.device_put(up_k)
+        dev_v = tuple(jax.device_put(v) for v in up_v)
+        up_bytes = up_k.nbytes + sum(v.nbytes for v in up_v)
+        ledger.alloc(up_bytes)
+        up_total += up_bytes
+        tabs = tuple(jnp.asarray(t) for t in strip.tables)
+        tab_bytes = sum(t.nbytes for t in strip.tables)
+        ledger.alloc(tab_bytes)
+        # pad the exact upload out to the fixed slab (sentinel keys, zero
+        # values) so every strip of a round shares one kernel signature
+        pad = bufsize - strip.out_len
+        slab_k = jnp.concatenate([dev_k, jnp.full((pad,), sentinel, udtype)])
+        slab_v = tuple(jnp.concatenate([v, jnp.zeros((pad,), v.dtype)])
+                       for v in dev_v)
+        slab_bytes = slab_k.nbytes + sum(v.nbytes for v in slab_v)
+        ledger.alloc(slab_bytes)
+        ledger.free(up_bytes)
+        return slab_k, slab_v, tabs, slab_bytes + tab_bytes
+
+    def launch(staged):
+        slab_k, slab_v, tabs, held = staged
+        alt_k = jnp.full((bufsize,), sentinel, udtype)
+        alt_v = tuple(jnp.zeros((bufsize,), v.dtype) for v in slab_v)
+        alt_bytes = alt_k.nbytes + sum(v.nbytes for v in alt_v)
+        ledger.alloc(alt_bytes)
+        out_k, out_v = kmerge.kway_merge_round(
+            slab_k, slab_v, alt_k, alt_v, *tabs, kway=kway, tpb=tile,
+            n=slab, interpret=interpret)
+        return out_k, out_v, held + alt_bytes
+
+    def collect(launched, job):
+        nonlocal down_total
+        out_k, out_v, held = launched
+        lo, sl = job.strip.out_lo, job.strip.out_len
+        kb = np.asarray(out_k[:sl])
+        job.mk[lo:lo + sl] = kb
+        down = kb.nbytes
+        for li, v in enumerate(out_v):
+            vb = np.asarray(v[:sl])
+            job.mv[li][lo:lo + sl] = vb
+            down += vb.nbytes
+        down_total += down
+        ledger.free(held)
+
+    while len(keys_h) > 1:
+        next_k, next_v, jobs = [], [], []
+        for grp in kmerge.merge_groups(list(range(len(keys_h))), kway):
+            if len(grp) == 1:           # leftover run: carried for free
+                next_k.append(keys_h[grp[0]])
+                next_v.append(vals_h[grp[0]])
+                continue
+            kruns = [keys_h[j] for j in grp]
+            vruns = [vals_h[j] for j in grp]
+            glen = sum(r.shape[0] for r in kruns)
+            mk = np.empty(glen, udtype)
+            mv = tuple(np.empty(glen, v.dtype) for v in vruns[0])
+            next_k.append(mk)
+            next_v.append(mv)
+            for strip in kmerge.spill_group_plan(kruns, kway, tile, slab):
+                jobs.append(_Job(strip, kruns, vruns, mk, mv))
+        staged = stage(jobs[0])
+        prev = None
+        for i, job in enumerate(jobs):
+            nxt = stage(jobs[i + 1]) if i + 1 < len(jobs) else None  # up i+1
+            launched = launch(staged)                                # run i
+            if prev is not None:
+                collect(*prev)                                       # down i-1
+            prev = (launched, job)
+            staged = nxt
+        collect(*prev)
+        keys_h, vals_h = next_k, next_v
+        rounds += 1
+    return keys_h[0], vals_h[0], rounds, up_total, down_total
+
+
 def oocsort(reader, chunk_elems: int, values: Any = None,
             cfg: Optional[model.SortConfig] = None,
             engine: Optional[str] = None, interpret: Optional[bool] = None,
-            kway: int = 4, tile: int = 256, return_stats: bool = False):
+            kway: int = 4, tile: int = 256, return_stats: bool = False,
+            spill_budget_bytes: Optional[int] = None,
+            device_slab_elems: Optional[int] = None):
     """Sort a host-resident array (or chunk stream) larger than one device run.
 
     ``reader`` is a 1-D numpy array, an iterable of 1-D key chunks (all of
@@ -183,6 +408,17 @@ def oocsort(reader, chunk_elems: int, values: Any = None,
     ⌈log_``kway``⌉ rounds of the merge-path kernel, one Pallas launch per
     round on donated ping-pong buffers.
 
+    Setting ``spill_budget_bytes`` (a hard device-byte budget) and/or
+    ``device_slab_elems`` (an explicit slab capacity, floored to a multiple
+    of ``tile``) switches the merge phase to the **host-spill streaming**
+    regime: runs live host-side between rounds and every round streams
+    through a bounded handful of slab-sized device buffers (double-buffered
+    uploads/downloads, one kernel launch per slab sweep; worst case modeled
+    by ``_spill_peak_bytes``), so device memory stays bounded by the budget
+    no matter how large the input.  When a budget is given,
+    ``chunk_elems`` is clamped so the chunk phase fits it too, and the
+    returned ``OocStats.device_high_water_bytes`` stays under it.
+
     Returns host numpy arrays: ``sorted_keys``, or ``(sorted_keys,
     permuted_values)`` when values were given; append an :class:`OocStats`
     when ``return_stats``.  Pair movement is consistent but — like
@@ -195,6 +431,9 @@ def oocsort(reader, chunk_elems: int, values: Any = None,
         raise ValueError("kway must be >= 2")
     if tile < 8:
         raise ValueError("tile must be >= 8")
+    spill = spill_budget_bytes is not None or device_slab_elems is not None
+    if spill_budget_bytes is not None and spill_budget_bytes < 1:
+        raise ValueError("spill_budget_bytes must be >= 1")
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
 
@@ -209,11 +448,66 @@ def oocsort(reader, chunk_elems: int, values: Any = None,
             out = out + (stats,)
         return out[0] if len(out) == 1 else out
 
+    if key_dtype is None:
+        raise ValueError("empty iterator reader: yield at least one "
+                         "(possibly empty) chunk to fix the dtype")
+
+    # --- spill plan: slab capacity + chunk clamp from the device budget ----
+    # (validated before the empty-input return so a misconfigured slab or
+    # budget fails input-independently, not just on the first non-empty run)
+    elem_bytes = np.dtype(key_dtype).itemsize + \
+        sum(v.dtype.itemsize for v in empty_leaves)
+    slab = 0
+    if spill:
+        slab = device_slab_elems
+        if slab is not None:
+            slab -= slab % tile
+            if slab < tile:
+                raise ValueError("device_slab_elems must be >= tile")
+        if spill_budget_bytes is not None:
+            # the real constraint is the modeled worst case (incl. pad tile
+            # + descriptor tables, which matter at tight budgets): start
+            # from the explicit slab, or the footprint reservation when
+            # deriving, and shrink tile by tile until the peak provably fits
+            if slab is None:
+                slab = spill_budget_bytes // (_SLAB_FOOTPRINT * elem_bytes)
+                slab -= slab % tile
+            while slab >= tile and _spill_peak_bytes(
+                    slab, tile, elem_bytes, kway) > spill_budget_bytes:
+                slab -= tile
+            if slab < tile:
+                raise ValueError(
+                    f"spill_budget_bytes={spill_budget_bytes} too small: "
+                    f"need >= "
+                    f"{_spill_peak_bytes(tile, tile, elem_bytes, kway)} "
+                    f"for tile={tile} (worst-case stream of one-tile slabs)")
+            # largest chunk whose engine-aware peak (kernel chunks allocate
+            # pad_length(n, kpb)-sized ping-pong pairs) fits the budget
+            peak = lambda c: _chunk_peak_bytes(c, elem_bytes, cfg, engine,
+                                               key_dtype)
+            if peak(1) > spill_budget_bytes:
+                raise ValueError(
+                    f"spill_budget_bytes={spill_budget_bytes} too small for "
+                    f"the chunk phase: even a 1-element chunk sort models "
+                    f"{peak(1)} device bytes (engine "
+                    f"{resolve_engine(engine)!r}; the kernel engine pads to "
+                    f"whole cfg.kpb tiles — pass a smaller-kpb cfg)")
+            lo = 1
+            hi = max(1, spill_budget_bytes // (_CHUNK_FOOTPRINT * elem_bytes))
+            while peak(hi) <= spill_budget_bytes and hi < chunk_elems:
+                hi = min(2 * hi, chunk_elems)    # the reservation start is
+                # conservative for the jnp engines; grow to the model's edge
+            while lo < hi:
+                mid = (lo + hi + 1) // 2
+                lo, hi = (mid, hi) if peak(mid) <= spill_budget_bytes \
+                    else (lo, mid - 1)
+            if lo < chunk_elems:
+                chunk_elems = lo
+                chunks = _split_chunks(chunks, chunk_elems)
+
     if not chunks:
-        if key_dtype is None:
-            raise ValueError("empty iterator reader: yield at least one "
-                             "(possibly empty) chunk to fix the dtype")
-        stats = OocStats(0, 0, chunk_elems, 0, 0)
+        stats = OocStats(0, 0, chunk_elems, 0, 0,
+                         spill_slab_elems=slab if spill else 0)
         return finish(np.empty((0,), key_dtype), empty_leaves, stats)
 
     k = bijection.key_bits(key_dtype)
@@ -229,23 +523,62 @@ def oocsort(reader, chunk_elems: int, values: Any = None,
                     "jax_enable_x64")
 
     # --- chunk phase: double-buffered staging, §5's upload/sort overlap ----
-    h2d = 0
-    runs = []
-    staged = jax.device_put(chunks[0])
-    h2d += chunks[0][0].nbytes + sum(v.nbytes for v in chunks[0][1])
-    for nxt in chunks[1:]:
-        nxt_dev = jax.device_put(nxt)           # stage i+1 ...
-        h2d += nxt[0].nbytes + sum(v.nbytes for v in nxt[1])
-        runs.append(_sort_chunk(*staged, cfg, engine, interpret))  # sort i
-        staged = nxt_dev
-    runs.append(_sort_chunk(*staged, cfg, engine, interpret))
+    ledger = _DeviceLedger()
     num_chunks = len(chunks)
     lens = [c[0].shape[0] for c in chunks]
     n = sum(lens)
+    h2d = d2h = 0
 
-    # --- merge phase: flat ping-pong run buffers, one launch per round -----
+    staged = jax.device_put(chunks[0])
+    staged_bytes = _chunk_nbytes(chunks[0])
+    ledger.alloc(staged_bytes)
+    h2d += staged_bytes
+    runs = []          # device runs (resident merge) or host runs (spill)
+    pending = None     # spill: (device run, run bytes, working bytes) to D2H
+    for i in range(num_chunks):
+        nxt = nxt_bytes = None
+        if i + 1 < num_chunks:
+            nxt_bytes = _chunk_nbytes(chunks[i + 1])
+            nxt = jax.device_put(chunks[i + 1])      # stage i+1 ...
+            ledger.alloc(nxt_bytes)
+            h2d += nxt_bytes
+        ws = _chunk_working_bytes(chunks[i][0].shape[0], elem_bytes, cfg,
+                                  engine, key_dtype)
+        ledger.alloc(ws)                             # sort ping-pong model
+        run = _sort_chunk(*staged, cfg, engine, interpret)     # ... sort i
+        ledger.alloc(staged_bytes)                   # the sorted run
+        if spill:
+            if pending is not None:                  # ... download run i-1
+                runs.append((np.asarray(pending[0][0]),
+                             tuple(np.asarray(v) for v in pending[0][1])))
+                d2h += pending[1]
+                ledger.free(pending[2])
+            pending = (run, staged_bytes, 2 * staged_bytes + ws)
+        else:
+            runs.append(run)
+            ledger.free(staged_bytes + ws)           # staged + working set
+        staged, staged_bytes = nxt, nxt_bytes
+    if spill:
+        runs.append((np.asarray(pending[0][0]),
+                     tuple(np.asarray(v) for v in pending[0][1])))
+        d2h += pending[1]
+        ledger.free(pending[2])
+    chunk_up, chunk_down = h2d, d2h
+
+    # --- merge phase ------------------------------------------------------
     rounds = 0
-    if num_chunks == 1:
+    spill_up = spill_down = 0
+    if spill:
+        keys_h, vals_h, rounds, spill_up, spill_down = (
+            (runs[0][0], runs[0][1], 0, 0, 0) if num_chunks == 1 else
+            _spill_merge([r[0] for r in runs], [r[1] for r in runs],
+                         kway=kway, tile=tile, slab=slab,
+                         interpret=interpret, ledger=ledger))
+        h2d += spill_up
+        d2h += spill_down
+        keys_np = bijection.from_ordered_bits_np(keys_h, key_dtype)
+        leaves_np = tuple(vals_h)
+    elif num_chunks == 1:
         ck, cv = runs[0]             # single run: no marshalling, no merge
     else:
         # the padded current/alternate buffers follow fused.make_ping_pong's
@@ -264,8 +597,11 @@ def oocsort(reader, chunk_elems: int, values: Any = None,
             for i in range(num_leaves))
         ak = jnp.full_like(ck, sentinel)
         av = tuple(jnp.zeros_like(v) for v in cv)
-        del runs, staged, chunks     # release the per-run device buffers:
-        # the merge phase's footprint is the two flat ping-pong buffers only
+        ledger.alloc(2 * n_pad * elem_bytes)         # flat ping-pong pair
+        ledger.free(n * elem_bytes)                  # per-run buffers release
+        del runs, staged, chunks     # the merge phase's footprint is the two
+        # flat ping-pong buffers only — the very footprint the spill regime
+        # replaces with bounded slabs
 
         while len(lens) > 1:
             nk, nv = merge_round(ck, cv, ak, av, lens=tuple(lens), kway=kway,
@@ -275,8 +611,15 @@ def oocsort(reader, chunk_elems: int, values: Any = None,
             lens = [sum(g) for g in kmerge.merge_groups(lens, kway)]
             rounds += 1
 
-    keys_np = np.asarray(bijection.from_ordered_bits(ck[:n], key_dtype))
-    leaves_np = tuple(np.asarray(v[:n]) for v in cv)
-    d2h = keys_np.nbytes + sum(v.nbytes for v in leaves_np)
-    stats = OocStats(num_chunks, rounds, chunk_elems, h2d, d2h)
+    if not spill:
+        keys_np = np.asarray(bijection.from_ordered_bits(ck[:n], key_dtype))
+        leaves_np = tuple(np.asarray(v[:n]) for v in cv)
+        d2h += keys_np.nbytes + sum(v.nbytes for v in leaves_np)
+    stats = OocStats(
+        num_chunks, rounds, chunk_elems, h2d, d2h,
+        device_high_water_bytes=ledger.high,
+        chunk_link_bytes=chunk_up + (chunk_down if spill else d2h),
+        spill_link_bytes=spill_up + spill_down,
+        rounds_spilled=rounds if spill else 0,
+        spill_slab_elems=slab)
     return finish(keys_np, leaves_np, stats)

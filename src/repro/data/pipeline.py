@@ -14,7 +14,10 @@ Corpora larger than one device run route through the §5 out-of-core
 pipeline instead (``ooc_chunk_elems``): shard-sized batches are ordered by
 ``core.outofcore.oocsort`` — chunked device sorts under double-buffered
 staging plus the streaming k-way merge — so bucketing scales past device
-memory with the same packing contract.
+memory with the same packing contract.  Corpora whose *runs* no longer fit
+device memory additionally set ``ooc_spill_budget_bytes``: the merge phase
+then streams host-resident runs through budget-bounded device slabs (the
+§5 beyond-device-memory regime), still the same packing contract.
 """
 from __future__ import annotations
 
@@ -62,7 +65,9 @@ class SyntheticLMData:
 
 def length_bucketed_batches(lengths: np.ndarray, batch_tokens: int,
                             engine: Optional[str] = None,
-                            ooc_chunk_elems: Optional[int] = None):
+                            ooc_chunk_elems: Optional[int] = None,
+                            ooc_spill_budget_bytes: Optional[int] = None,
+                            ooc_device_slab_elems: Optional[int] = None):
     """Order documents by length via two LSD counting passes, then pack.
 
     The ordering is an explicit LSD radix sort on the shared engine-selected
@@ -71,17 +76,26 @@ def length_bucketed_batches(lengths: np.ndarray, batch_tokens: int,
     exceed one device run set ``ooc_chunk_elems``: the order then comes from
     the §5 out-of-core pipeline (``core.outofcore.oocsort`` with the doc
     indices as the value payload — chunk sorts overlapped with staging, then
-    streaming k-way merge rounds).  Returns (order, bucket_bounds):
+    streaming k-way merge rounds).  ``ooc_spill_budget_bytes`` /
+    ``ooc_device_slab_elems`` pass through to ``oocsort``'s host-spill
+    streaming merge, bounding device bytes for corpora whose sorted runs
+    exceed device memory.  Returns (order, bucket_bounds):
     ``order`` is the sorted document order (longest-with-longest minimises
     padding waste), bounds delimit batches of at most ``batch_tokens``
     padded tokens.
     """
     lengths = np.asarray(lengths, np.uint32)
+    if ooc_chunk_elems is None and (ooc_spill_budget_bytes is not None or
+                                    ooc_device_slab_elems is not None):
+        raise ValueError("ooc spill options require ooc_chunk_elems (the "
+                         "spill regime is part of the out-of-core route)")
     if ooc_chunk_elems is not None:
         from repro.core.outofcore import oocsort
         sorted_len, order = oocsort(
             lengths, ooc_chunk_elems, engine=engine,
-            values=np.arange(lengths.shape[0], dtype=np.int32))
+            values=np.arange(lengths.shape[0], dtype=np.int32),
+            spill_budget_bytes=ooc_spill_budget_bytes,
+            device_slab_elems=ooc_device_slab_elems)
     else:
         # host-side: only as many passes as the longest document needs
         max_len = int(lengths.max()) if lengths.size else 0

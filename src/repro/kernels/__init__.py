@@ -4,9 +4,13 @@ fused       — ONE launch per counting pass: block-descriptor partition +
               coalesced scatter of pass i fused with the digit histogram of
               pass i+1, on donated ping-pong buffers (§4.2–§4.4)
 merge       — ONE launch per k-way merge round (§5): merge-path diagonal
-              partition of K sorted runs per output tile, coalesced merge
+              partition of K sorted runs per output tile (per-run-pair
+              searchsorted co-ranks inside the tile), coalesced merge
               writes with KV payloads, donated ping-pong buffers — the
-              device half of ``core.outofcore``'s pipelined sort
+              device half of ``core.outofcore``'s pipelined sort; plus the
+              host-side partition math (``host_coranks``,
+              ``spill_group_plan``) that cuts groups of host-spilled runs
+              into device-slab-sized strips, ONE launch per slab sweep
 histogram   — one-hot MXU contraction histogram (§4.3's atomics, TPU-native)
 multisplit  — in-VMEM tile partition + write combining (§4.4 / Fig. 3); the
               fused pass's per-block partition math, kept as the standalone
@@ -42,16 +46,30 @@ key of b bytes (values: v bytes):
 | run marshalling (concat +   | —               | 3·(b+v)  (1R + 2W, once)   |
 |   alternate-buffer fill)    |                 |                            |
 | merge rounds (merge kernel) | —               | 2·⌈log_K C⌉·(b+v)          |
-| result gather               | 1·(b+v)         | —                          |
+| spill rounds (host-resident | 2·(b+v) each    | 2·(b+v) each (slab-sized   |
+|   runs, slab-streamed merge)|                 | buffers only)              |
+| result gather               | 1·(b+v)         | —  (spill: runs gathered   |
+|                             |                 |    during the chunk phase) |
 
-Every key crosses the host link exactly twice regardless of C (the §5
-pipeline hides the upload behind the previous chunk's sort), and each merge
-round reads and writes the whole run buffer once — one ``pallas_call`` per
-round, ⌈log_K C⌉ rounds.  The merge-path diagonal searches add
-O(tiles · K · log chunk) gathered elements, sub-leading for any real tile
-size.  On this CPU container interpret-mode overhead dominates, so the
-tracked proxy is the argsort/ooc ratio trajectory in BENCH_ooc.json plus
-the structural census (``utils.hlo.launch_census``).
+Device-resident regime (rows 1–4 + gather): every key crosses the host link
+exactly twice regardless of C (the §5 pipeline hides the upload behind the
+previous chunk's sort), and each merge round reads and writes the whole run
+buffer once — one ``pallas_call`` per round, ⌈log_K C⌉ rounds.  Host-spill
+regime (``oocsort(spill_budget_bytes=...)``): run marshalling and the flat
+merge buffers disappear — runs live host-side between rounds, every spilled
+round streams each multi-run group through fixed device slabs (strip i+1's
+upload and strip i−1's download in flight around strip i's launch, one
+``pallas_call`` per group-slab sweep), and total host crossings are
+``2·N·(b+v)·(1 + rounds_spilled)`` — leftover single-run groups carry over
+host-side for free, and device bytes stay bounded by the budget
+(``OocStats.device_high_water_bytes``) no matter how large N grows, which
+is what makes the §5 beyond-device-memory claim literal.  The merge-path
+diagonal searches add O(tiles · K · log chunk) gathered (host-spill:
+probed) elements and O(G·K) int32 descriptor uploads per strip, sub-leading
+for any real tile size.  On this CPU container interpret-mode overhead
+dominates, so the tracked proxy is the argsort/ooc ratio trajectory in
+BENCH_ooc.json (``spill/...`` rows for the streamed regime) plus the
+structural census (``utils.hlo.launch_census``).
 """
 from repro.kernels.histogram import radix_histogram
 from repro.kernels.multisplit import tile_multisplit, tile_multisplit_kv
@@ -60,8 +78,9 @@ from repro.kernels.bitonic import (bitonic_sort_rows, bitonic_sort_rows_kv,
 from repro.kernels.assigned import assigned_histogram
 from repro.kernels.fused import (fused_counting_pass, initial_histogram,
                                  make_ping_pong, pad_length)
-from repro.kernels.merge import (kway_merge_round, merge_path_partition,
-                                 num_merge_rounds)
+from repro.kernels.merge import (host_coranks, kway_merge_round,
+                                 merge_path_partition, num_merge_rounds,
+                                 spill_group_plan)
 from repro.kernels.ops import (apply_run_copies, kernel_local_sort,
                                segmented_local_sort, tile_histogram_pass)
 
@@ -70,7 +89,8 @@ __all__ = [
     "bitonic_sort_rows", "bitonic_sort_rows_kv", "bitonic_sort_rows_stable",
     "assigned_histogram",
     "fused_counting_pass", "initial_histogram", "make_ping_pong", "pad_length",
-    "kway_merge_round", "merge_path_partition", "num_merge_rounds",
+    "host_coranks", "kway_merge_round", "merge_path_partition",
+    "num_merge_rounds", "spill_group_plan",
     "apply_run_copies", "kernel_local_sort", "segmented_local_sort",
     "tile_histogram_pass",
 ]

@@ -148,6 +148,7 @@ def test_expected_speedups_match_paper():
     assert abs(expected_speedup(64) - 1.625) < 1e-6    # 13 vs 8 passes
 
 
+@pytest.mark.slow
 @settings(max_examples=25, deadline=None)
 @given(st.lists(st.integers(0, 2**32 - 1), min_size=0, max_size=400),
        st.integers(1, 6))
@@ -158,6 +159,7 @@ def test_hybrid_property_vs_npsort(xs, dbits):
     assert np.array_equal(np.sort(x), np.asarray(out))
 
 
+@pytest.mark.slow
 @settings(max_examples=15, deadline=None)
 @given(st.lists(st.floats(allow_nan=False, width=32), min_size=0, max_size=300))
 def test_hybrid_property_floats(xs):

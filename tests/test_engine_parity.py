@@ -46,7 +46,8 @@ def _all_engine_outputs(x, cfg, values=None):
 
 
 @pytest.mark.parametrize("dtype", [np.uint32, np.int32, np.float32])
-@pytest.mark.parametrize("n", [0, 1, 2, 257, 4096])
+@pytest.mark.parametrize(
+    "n", [0, 1, 2, 257, pytest.param(4096, marks=pytest.mark.slow)])
 def test_parity_keys(rng, dtype, n):
     x = _keys(rng, dtype, n)
     outs = _all_engine_outputs(x, TCFG)
@@ -55,6 +56,7 @@ def test_parity_keys(rng, dtype, n):
         assert k.tobytes() == outs["argsort"][0].tobytes(), eng
 
 
+@pytest.mark.slow
 def test_parity_uint64(rng):
     from jax.experimental import enable_x64
     with enable_x64():
@@ -91,7 +93,9 @@ def test_parity_value_pytree(rng):
         assert np.array_equal(np.asarray(va[leaf]), np.asarray(vk[leaf])), leaf
 
 
-@pytest.mark.parametrize("ands", [0, 1, 3, 8])
+@pytest.mark.parametrize(
+    "ands", [0, pytest.param(1, marks=pytest.mark.slow),
+             pytest.param(3, marks=pytest.mark.slow), 8])
 def test_parity_entropy_sweep(rng, ands):
     """Thearling & Smith reduced-entropy inputs (paper §6's distributions)."""
     x = entropy_keys(rng, 8192, ands)

@@ -56,6 +56,7 @@ def _assert_fused_matches_argsort(x, with_values):
 
 
 if HAVE_HYPOTHESIS:
+    @pytest.mark.slow
     @settings(max_examples=25, deadline=None)
     @given(st.integers(0, 2**32 - 1),
            st.sampled_from(DTYPES),
@@ -66,6 +67,7 @@ if HAVE_HYPOTHESIS:
         rng = np.random.default_rng(seed)
         _assert_fused_matches_argsort(_keys(rng, dtype, n, ands), with_values)
 
+    @pytest.mark.slow
     @settings(max_examples=10, deadline=None)
     @given(st.integers(0, 2**32 - 1), st.integers(0, 400), st.integers(0, 4))
     def test_fused_matches_argsort_property_uint64(seed, n, ands):
@@ -79,7 +81,8 @@ if HAVE_HYPOTHESIS:
 # ------- deterministic sweep: runs with or without hypothesis ---------------
 
 @pytest.mark.parametrize("dtype", DTYPES)
-@pytest.mark.parametrize("n", [0, 1, 2, 63, 64, 65, 257])
+@pytest.mark.parametrize(
+    "n", [0, 1, 2, 63, 64, 65, pytest.param(257, marks=pytest.mark.slow)])
 @pytest.mark.parametrize("with_values", [False, True])
 def test_fused_matches_argsort_sweep(rng, dtype, n, with_values):
     _assert_fused_matches_argsort(_keys(rng, dtype, n, 1), with_values)

@@ -11,6 +11,7 @@ covers the lowered text).
 """
 import jax
 import jax.numpy as jnp
+import numpy as np
 import pytest
 
 from repro.core import SortConfig, hybrid_sort, lsd_sort, model
@@ -101,6 +102,95 @@ def test_ooc_chunk_sort_keeps_one_launch_per_pass():
     assert hlo.while_body_pallas_launches(jx) == [1]
     assert hlo.pallas_launch_count(jx) == 3
     assert hlo.launch_census(jx) == {"total": 3, "while_bodies": [1]}
+
+
+def test_spill_slab_sweep_single_launch_and_sort_free():
+    """§5 spill census: one group-slab sweep — the device-side pad of the
+    exact strip upload plus the merge-kernel launch — is exactly ONE
+    pallas_call with no launches hiding in while bodies, and traces to zero
+    (stable)HLO sort ops."""
+    slab, tile, kway = 64, 16, 4
+    buf = pad_length(slab, tile)
+    G = slab // tile
+    sentinel = ~jnp.zeros((), jnp.uint32)
+
+    def sweep(up_k, alt_k, off, cnt, ws, wt):
+        slab_k = jnp.concatenate(
+            [up_k, jnp.full((buf - up_k.shape[0],), sentinel, jnp.uint32)])
+        return kmerge.kway_merge_round(slab_k, (), alt_k, (), off, cnt, ws,
+                                       wt, kway=kway, tpb=tile, n=slab,
+                                       interpret=True)
+
+    args = (jnp.zeros((48,), jnp.uint32), jnp.full((buf,), sentinel),
+            jnp.zeros((G,), jnp.int32), jnp.zeros((G,), jnp.int32),
+            jnp.full((G * kway,), slab, jnp.int32),
+            jnp.zeros((G * kway,), jnp.int32))
+    jx = jax.make_jaxpr(sweep)(*args)
+    census = hlo.launch_census(jx)
+    assert census["total"] == 1
+    assert not any(census["while_bodies"])
+    assert hlo.sort_op_count(jax.jit(sweep).lower(*args).as_text()) == 0
+
+
+def test_spill_strip_tables_drive_single_launch(rng):
+    """End-to-end slab sweep on real spill_group_plan tables: one launch,
+    and the streamed strip output equals the whole-group reference."""
+    runs = [np.sort(rng.integers(0, 50, l).astype(np.uint32))
+            for l in (100, 37, 23)]
+    tile, slab, kway = 16, 32, 4
+    buf = pad_length(slab, tile)
+    sent = np.uint32(0xFFFFFFFF)
+    out = np.empty(sum(len(r) for r in runs), np.uint32)
+    sweep = lambda a, b, *t: kmerge.kway_merge_round(
+        a, (), b, (), *t, kway=kway, tpb=tile, n=slab, interpret=True)
+    for i, strip in enumerate(kmerge.spill_group_plan(runs, kway, tile,
+                                                      slab)):
+        wins = [runs[r][strip.win_lo[r]:strip.win_lo[r] + strip.win_len[r]]
+                for r in range(len(runs))]
+        up = np.concatenate(wins + [np.full(buf - strip.out_len, sent)])
+        args = (jnp.asarray(up), jnp.full((buf,), sent, jnp.uint32),
+                *(jnp.asarray(t) for t in strip.tables))
+        if i == 0:                        # census the real-tables sweep too
+            census = hlo.launch_census(jax.make_jaxpr(sweep)(*args))
+            assert census == {"total": 1, "while_bodies": []}
+        ok, _ = sweep(*args)
+        out[strip.out_lo:strip.out_lo + strip.out_len] = \
+            np.asarray(ok[:strip.out_len])
+    flat = np.concatenate(runs)
+    rid = np.concatenate([[i] * len(r) for i, r in enumerate(runs)])
+    ref = flat[np.lexsort((np.arange(len(flat)), rid, flat))]
+    assert np.array_equal(out, ref)
+
+
+def test_searchsorted_rank_byte_identical_to_counting_rank(rng):
+    """The parity gate for the kernel's tile-local merge rework: the
+    per-run-pair searchsorted co-rank kernel is byte-identical to the
+    (K·T)² counting-rank kernel it replaces, keys and values, including
+    sentinel-valued keys and heavy duplicates."""
+    lens = (200, 64, 1, 129)
+    n = sum(lens)
+    tile = 32
+    runs = [np.sort(np.where(rng.random(l) < 0.2, 0xFFFFFFFF,
+                             rng.integers(0, 12, l)).astype(np.uint32))
+            for l in lens]
+    flat = np.concatenate(runs)
+    n_pad = pad_length(n, tile)
+    ck = jnp.asarray(np.concatenate(
+        [flat, np.full(n_pad - n, 0xFFFFFFFF, np.uint32)]))
+    vals = np.arange(n, dtype=np.int32)
+    cv = (jnp.asarray(np.concatenate([vals, np.zeros(n_pad - n, np.int32)])),)
+    tables = kmerge.merge_path_partition(ck, lens, 4, tile)
+    outs = {}
+    for rank in ("searchsorted", "counting"):
+        ok, ov = kmerge.kway_merge_round(
+            ck, cv, jnp.full_like(ck, 0xFFFFFFFF),
+            (jnp.zeros_like(cv[0]),), *tables, kway=4, tpb=tile, n=n,
+            interpret=True, rank=rank)
+        outs[rank] = (np.asarray(ok).tobytes(), np.asarray(ov[0]).tobytes())
+    assert outs["searchsorted"] == outs["counting"]
+    with pytest.raises(ValueError, match="rank"):
+        kmerge.kway_merge_round(ck, cv, ck, cv, *tables, kway=4, tpb=tile,
+                                n=n, rank="bogus")
 
 
 def test_pallas_custom_call_counter_on_text():

@@ -1,0 +1,254 @@
+"""Property wall for the merge-path partition math, in isolation.
+
+``kernels.merge``'s diagonal partition (``_coranks`` on device,
+``host_coranks`` on host-spilled runs) and its strip/tile descriptors
+(``merge_path_partition``, ``spill_group_plan``) were previously exercised
+only end-to-end through ``oocsort``; this file pins their contracts
+directly:
+
+  * co-ranks are monotone non-decreasing along diagonals and sum to every
+    diagonal exactly,
+  * the selected prefix at every diagonal is exactly the m smallest window
+    elements under (key, run, position) order,
+  * partition strips tile every output position exactly once, and replaying
+    the per-tile windows reproduces the stable-merge oracle — so the (key,
+    run, position) tie order survives tile AND slab-strip boundaries,
+  * degenerate runs: empty, length-1, all-equal, single-run.
+
+The deterministic sweep runs everywhere; hypothesis (optional test
+dependency, as in test_core_sort) widens the same properties and is marked
+``slow`` (full-stage only).
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+try:  # hypothesis is an optional test dependency (see pyproject.toml)
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised on bare interpreters
+    HAVE_HYPOTHESIS = False
+
+from repro.kernels import merge as kmerge
+from repro.kernels.fused import pad_length
+
+SENTINEL32 = np.uint32(0xFFFFFFFF)
+
+
+# --------------------------- oracles ---------------------------------------
+
+def _oracle_merge_order(runs):
+    """Stable k-way merge order of ``runs`` under (key, run, position)."""
+    if not runs or sum(len(r) for r in runs) == 0:
+        return (np.empty(0, np.uint32), np.empty(0, np.int64),
+                np.empty(0, np.int64))
+    keys = np.concatenate(runs)
+    rid = np.concatenate([np.full(len(r), i, np.int64)
+                          for i, r in enumerate(runs)])
+    pos = np.concatenate([np.arange(len(r), dtype=np.int64) for r in runs])
+    order = np.lexsort((pos, rid, keys))
+    return keys[order], rid[order], pos[order]
+
+
+def _device_coranks(runs, diags):
+    """Drive the device ``_coranks`` on sentinel-padded stacked rows."""
+    lens = [len(r) for r in runs]
+    lmax = max(max(lens), 1)
+    rows = [np.concatenate([r, np.full(lmax - len(r), SENTINEL32,
+                                       np.uint32)]) for r in runs]
+    return np.asarray(kmerge._coranks(jnp.stack([jnp.asarray(r)
+                                                 for r in rows]),
+                                      tuple(lens), np.asarray(diags)))
+
+
+def _check_coranks(runs, diags, cor):
+    """The three co-rank contracts at every diagonal."""
+    cor = np.asarray(cor, np.int64)
+    lens = np.array([len(r) for r in runs], np.int64)
+    diags = np.asarray(diags, np.int64)
+    # bounds and per-diagonal sum
+    assert (cor >= 0).all() and (cor <= lens[None, :]).all()
+    assert np.array_equal(cor.sum(axis=1), diags)
+    # monotone non-decreasing along diagonals, run by run
+    assert (np.diff(cor, axis=0) >= 0).all()
+    # the selected prefix is exactly the m smallest under (key, run, pos):
+    # the oracle's first m elements, counted per run, ARE the co-ranks
+    _, rid, _ = _oracle_merge_order(runs)
+    for i, m in enumerate(diags):
+        taken = np.bincount(rid[:m].astype(np.int64), minlength=len(runs))
+        assert np.array_equal(cor[i], taken), (m, cor[i], taken)
+
+
+def _replay_round(runs, kway, tile):
+    """Replay one flat merge round from its partition tables, in numpy."""
+    lens = tuple(len(r) for r in runs)
+    n = sum(lens)
+    n_pad = pad_length(n, tile)
+    flat = np.concatenate([np.concatenate(runs),
+                           np.full(n_pad - n, SENTINEL32, np.uint32)])
+    tables = kmerge.merge_path_partition(jnp.asarray(flat), lens, kway, tile)
+    out_off, out_cnt, ws, wt = (np.asarray(t) for t in tables)
+    out = np.empty(n, np.uint32)
+    seen = np.zeros(n, np.int64)
+    for g in range(out_off.shape[0]):
+        elems = []
+        for r in range(kway):
+            s, t = ws[g * kway + r], wt[g * kway + r]
+            assert 0 <= s <= n and 0 <= t <= tile
+            elems.append(flat[s:s + t])
+        assert sum(len(e) for e in elems) == out_cnt[g]
+        mk, _, _ = _oracle_merge_order(elems)        # tile-local stable merge
+        out[out_off[g]:out_off[g] + out_cnt[g]] = mk
+        seen[out_off[g]:out_off[g] + out_cnt[g]] += 1
+    assert (seen == 1).all()                         # exactly-once tiling
+    return out
+
+
+def _replay_strips(runs, kway, tile, slab):
+    """Replay a spill-planned group strip by strip, in numpy."""
+    glen = sum(len(r) for r in runs)
+    strips = kmerge.spill_group_plan(runs, kway, tile, slab)
+    G = slab // tile
+    out = np.empty(glen, np.uint32)
+    seen = np.zeros(glen, np.int64)
+    for s in strips:
+        assert sum(s.win_len) == s.out_len
+        off, cnt, ws, wt = s.tables
+        assert off.shape == (G,) and ws.shape == (G * kway,)
+        wins = [runs[r][s.win_lo[r]:s.win_lo[r] + s.win_len[r]]
+                for r in range(len(runs))]
+        slab_buf = np.concatenate(
+            wins + [np.full(pad_length(slab, tile) - s.out_len, SENTINEL32,
+                            np.uint32)])
+        for g in range(G):
+            elems = [slab_buf[ws[g * kway + r]:ws[g * kway + r] +
+                              wt[g * kway + r]] for r in range(kway)]
+            assert sum(len(e) for e in elems) == cnt[g]
+            mk, _, _ = _oracle_merge_order(elems)
+            lo = s.out_lo + off[g]
+            out[lo:lo + cnt[g]] = mk
+            seen[lo:lo + cnt[g]] += 1
+    assert (seen == 1).all()                         # strips tile exactly once
+    return out
+
+
+def _assert_group_merges(runs, kway, tile, slab):
+    """Both partition flavours replay to the stable-merge oracle."""
+    ref, _, _ = _oracle_merge_order(runs)
+    if len(runs) <= kway and sum(len(r) for r in runs):
+        got = _replay_round(runs, kway, tile)
+        assert np.array_equal(got, ref), "flat partition replay"
+    got = _replay_strips(runs, kway, tile, slab)
+    assert np.array_equal(got, ref), "strip replay"
+
+
+# --------------------------- deterministic sweep ----------------------------
+
+def _runs(rng, lens, hi=64):
+    return [np.sort(rng.integers(0, hi, l).astype(np.uint32)) for l in lens]
+
+
+CASES = [
+    (77, 33, 10, 5),          # uneven four-way
+    (64, 64, 64, 64),         # aligned
+    (100, 1),                 # length-1 run
+    (1, 1, 1, 1),             # all length-1
+    (0, 50, 0, 3),            # empty runs interleaved
+    (5,),                     # single run (copy-through partition)
+    (256, 17, 96),
+]
+
+
+@pytest.mark.parametrize("lens", CASES, ids=[str(c) for c in CASES])
+def test_partition_and_strips_match_oracle(rng, lens):
+    runs = _runs(rng, lens)
+    _assert_group_merges(runs, kway=4, tile=8, slab=16)
+    _assert_group_merges(runs, kway=4, tile=16, slab=64)
+
+
+def test_all_equal_keys_keep_run_order(rng):
+    """Ties everywhere: the merged output must keep (run, position) order,
+    across tile and strip boundaries alike."""
+    runs = [np.full(l, 7, np.uint32) for l in (40, 13, 0, 25)]
+    ref_k, ref_r, ref_p = _oracle_merge_order(runs)
+    assert (np.diff(ref_r) >= 0).all()               # oracle sanity
+    _assert_group_merges(runs, kway=4, tile=8, slab=16)
+
+
+def test_sentinel_valued_keys(rng):
+    """Keys equal to the pad sentinel must still merge exactly once."""
+    runs = [np.sort(np.where(rng.random(l) < 0.5, SENTINEL32,
+                             rng.integers(0, 9, l)).astype(np.uint32))
+            for l in (30, 22, 9)]
+    _assert_group_merges(runs, kway=4, tile=8, slab=16)
+
+
+@pytest.mark.parametrize("lens", [(77, 33, 10, 5), (0, 50, 0, 3), (1, 200)])
+def test_host_coranks_contracts_and_device_parity(rng, lens):
+    runs = _runs(rng, lens, hi=32)
+    glen = sum(lens)
+    diags = np.minimum(np.arange(0, glen + 7, 7), glen)
+    cor = kmerge.host_coranks(runs, diags)
+    _check_coranks(runs, diags, cor)
+    assert np.array_equal(cor, _device_coranks(runs, diags))
+
+
+def test_host_coranks_degenerate():
+    empty = [np.empty(0, np.uint32), np.empty(0, np.uint32)]
+    cor = kmerge.host_coranks(empty, [0])
+    assert np.array_equal(cor, [[0, 0]])
+    ones = [np.array([3], np.uint32), np.array([3], np.uint32)]
+    cor = kmerge.host_coranks(ones, [0, 1, 2])
+    _check_coranks(ones, [0, 1, 2], cor)
+    # equal keys split by run order: diagonal 1 must take from run 0
+    assert np.array_equal(cor[1], [1, 0])
+
+
+def test_spill_group_plan_validation():
+    runs = [np.zeros(4, np.uint32)]
+    with pytest.raises(ValueError):
+        kmerge.spill_group_plan(runs, 4, 8, 12)      # not a tile multiple
+    with pytest.raises(ValueError):
+        kmerge.spill_group_plan(runs, 4, 8, 0)
+
+
+def test_spill_strip_dead_slots_point_at_pad(rng):
+    """Dead tiles / padded runs must aim at the slab pad (start = slab,
+    take = 0) so the kernel's window loads stay in bounds."""
+    runs = _runs(rng, (10, 5))                       # K=2 < kway=4, 1 strip
+    (s,) = kmerge.spill_group_plan(runs, kway=4, tile=16, slab_elems=64)
+    off, cnt, ws, wt = s.tables
+    G = 4
+    live_tiles = -(-15 // 16)
+    assert (cnt[live_tiles:] == 0).all()
+    dead = wt.reshape(G, 4) == 0
+    assert (ws.reshape(G, 4)[dead] == 64).all()
+
+
+# --------------------------- hypothesis drivers -----------------------------
+
+if HAVE_HYPOTHESIS:
+    run_lists = st.lists(
+        st.lists(st.integers(0, 30), min_size=0, max_size=50),
+        min_size=1, max_size=5)
+
+    @pytest.mark.slow
+    @settings(max_examples=40, deadline=None)
+    @given(data=run_lists, tile=st.sampled_from([8, 16]),
+           kway=st.integers(2, 5), slab_tiles=st.integers(1, 4))
+    def test_hypothesis_partition_oracle(data, tile, kway, slab_tiles):
+        runs = [np.sort(np.asarray(d, np.uint32)) for d in data]
+        _assert_group_merges(runs, kway=max(kway, len(runs)), tile=tile,
+                             slab=slab_tiles * tile)
+
+    @pytest.mark.slow
+    @settings(max_examples=40, deadline=None)
+    @given(data=run_lists, step=st.integers(1, 9))
+    def test_hypothesis_coranks(data, step):
+        runs = [np.sort(np.asarray(d, np.uint32)) for d in data]
+        glen = sum(len(r) for r in runs)
+        diags = np.minimum(np.arange(0, glen + step, step), glen)
+        cor = kmerge.host_coranks(runs, diags)
+        _check_coranks(runs, diags, cor)
+        if len(runs) > 1:
+            assert np.array_equal(cor, _device_coranks(runs, diags))

@@ -46,8 +46,10 @@ def _keys(rng, dtype, n):
 
 @pytest.mark.parametrize("dtype", [np.uint32, np.int32, np.float32])
 @pytest.mark.parametrize(
-    "n", [0, 1, 100, CHUNK, CHUNK + 1, 8 * CHUNK, 8 * CHUNK + 1,
-          9 * CHUNK - 1],
+    "n", [0, 1, 100, CHUNK, CHUNK + 1,
+          pytest.param(8 * CHUNK, marks=pytest.mark.slow),
+          pytest.param(8 * CHUNK + 1, marks=pytest.mark.slow),
+          pytest.param(9 * CHUNK - 1, marks=pytest.mark.slow)],
     ids=["empty", "one", "lt-chunk", "eq-chunk", "mod1", "mod0",
          "8mod1", "modKm1"])
 def test_oocsort_keys_parity(rng, dtype, n):
@@ -58,6 +60,7 @@ def test_oocsort_keys_parity(rng, dtype, n):
     assert out.tobytes() == _reference(x).tobytes()
 
 
+@pytest.mark.slow
 def test_oocsort_uint64(rng):
     from jax.experimental import enable_x64
     with enable_x64():
@@ -67,6 +70,7 @@ def test_oocsort_uint64(rng):
         assert out.tobytes() == _reference(x).tobytes()
 
 
+@pytest.mark.slow
 def test_oocsort_duplicates_and_sentinel(rng):
     for x in (np.zeros(1000, np.uint32),
               np.full(1000, 0xFFFFFFFF, np.uint32),      # == pad sentinel
@@ -124,7 +128,7 @@ def test_oocsort_iterator_reader(rng):
     pieces = [rng.integers(0, 2**32, m, dtype=np.uint32)
               for m in (100, 700, 3, 0, 450)]
     full = np.concatenate(pieces)
-    out = oocsort(iter(pieces), 256, tile=32)
+    out = oocsort(iter(pieces), 256, engine="argsort", tile=32)
     assert np.array_equal(out, np.sort(full))
 
 
@@ -143,7 +147,8 @@ def test_oocsort_iterator_kv_tuples(rng):
 def test_oocsort_stats_and_round_count(rng):
     x = rng.integers(0, 2**32, 8 * CHUNK, dtype=np.uint32)
     for kway, rounds in ((2, 3), (4, 2), (8, 1)):
-        out, stats = oocsort(x, CHUNK, kway=kway, tile=32, return_stats=True)
+        out, stats = oocsort(x, CHUNK, engine="argsort", kway=kway, tile=32,
+                             return_stats=True)
         assert np.array_equal(out, np.sort(x))
         assert isinstance(stats, OocStats)
         assert stats.num_chunks == 8
@@ -160,6 +165,7 @@ def test_oocsort_engine_parity(rng):
     assert np.array_equal(a, np.sort(x))
 
 
+@pytest.mark.slow
 def test_oocsort_chunking_invariance(rng):
     """The output is independent of the chunk plan (unique keys: bytewise)."""
     n = 2048
@@ -211,6 +217,245 @@ def test_length_bucketing_ooc_route(rng):
     assert np.array_equal(sl, lengths[ref_order])
     for a, b in zip(bounds[:-1], bounds[1:]):
         assert sl[a:b].max() * (b - a) <= 4096
+
+
+# ---------------- host-spill streaming merge (§5 beyond-device-memory) ------
+
+SPILL_TILE = 16
+SPILL_BUDGET = 4096      # device-byte budget; parity gates feed 16x its bytes
+
+
+def test_oocsort_spill_16x_budget_keys(rng):
+    """THE spill acceptance gate: an input 16x the device budget sorts
+    byte-identically while the driver's device high-water mark stays under
+    the budget — the test that fails if anyone re-materialises full runs on
+    device."""
+    n = 16 * SPILL_BUDGET // 4
+    x = _keys(rng, np.uint32, n)
+    out, st = oocsort(x, 1 << 20, engine="argsort", tile=SPILL_TILE,
+                      spill_budget_bytes=SPILL_BUDGET, return_stats=True)
+    assert x.nbytes >= 16 * SPILL_BUDGET
+    assert out.tobytes() == _reference(x).tobytes()
+    assert st.spill_slab_elems > 0
+    assert st.rounds_spilled == st.merge_rounds > 0
+    assert st.device_high_water_bytes <= SPILL_BUDGET
+    assert st.device_high_water_bytes < x.nbytes // 8   # runs stayed host-side
+
+
+def test_oocsort_spill_16x_budget_kv(rng):
+    """Spill acceptance, KV flavour: keys AND values byte-identical to the
+    np.sort/np.argsort reference under a 16x-budget (key+value bytes) load."""
+    n = 16 * SPILL_BUDGET // 8                          # 8 B per (key, value)
+    x = rng.permutation(n).astype(np.uint32)            # unique keys
+    v = np.arange(n, dtype=np.int32)
+    assert x.nbytes + v.nbytes >= 16 * SPILL_BUDGET
+    k, p, st = oocsort(x, 1 << 20, values=v, engine="argsort",
+                       tile=SPILL_TILE, spill_budget_bytes=SPILL_BUDGET,
+                       return_stats=True)
+    assert k.tobytes() == np.sort(x).tobytes()
+    assert p.tobytes() == np.argsort(x, kind="stable").astype(
+        np.int32).tobytes()
+    assert st.device_high_water_bytes <= SPILL_BUDGET
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("dtype", [np.uint32, np.int32, np.float32])
+def test_oocsort_spill_16x_budget_dtypes(rng, dtype):
+    """Full-stage dtype sweep of the 16x-budget spill parity gate."""
+    n = 16 * SPILL_BUDGET // 4
+    x = _keys(rng, dtype, n)
+    out, st = oocsort(x, 1 << 20, engine="argsort", tile=SPILL_TILE,
+                      spill_budget_bytes=SPILL_BUDGET, return_stats=True)
+    assert out.tobytes() == _reference(x).tobytes()
+    assert np.array_equal(out, np.sort(x))
+    assert st.device_high_water_bytes <= SPILL_BUDGET
+
+
+@pytest.mark.slow
+def test_oocsort_spill_uint64(rng):
+    from jax.experimental import enable_x64
+    with enable_x64():
+        n = 16 * SPILL_BUDGET // 8
+        x = entropy_keys(rng, n, 2, dtype=np.uint64)
+        out, st = oocsort(x, 1 << 20, engine="argsort", tile=SPILL_TILE,
+                          spill_budget_bytes=SPILL_BUDGET, return_stats=True)
+        assert out.tobytes() == _reference(x).tobytes()
+        assert st.device_high_water_bytes <= SPILL_BUDGET
+
+
+def test_oocsort_spill_equals_device_resident(rng):
+    """Regime invariance: the streamed merge is byte-identical to the
+    device-resident merge (same merge path, same tie order) for any slab."""
+    x = entropy_keys(rng, 3000, 3)                      # heavy duplicates
+    flat = oocsort(x, 300, engine="argsort", tile=32)
+    for slab in (64, 128, 960):
+        sp = oocsort(x, 300, engine="argsort", tile=32,
+                     device_slab_elems=slab)
+        assert sp.tobytes() == flat.tobytes(), slab
+
+
+def test_oocsort_spill_value_pytree(rng):
+    n = 6 * 128
+    x = rng.permutation(n).astype(np.uint32)
+    vals = {"a": np.arange(n, dtype=np.int32),
+            "b": np.arange(n, dtype=np.float32) * 2.0}
+    k, out = oocsort(x, 128, values=vals, tile=SPILL_TILE,
+                     device_slab_elems=64)
+    order = np.argsort(x, kind="stable")
+    assert np.array_equal(k, np.sort(x))
+    assert np.array_equal(out["a"], vals["a"][order])
+    assert np.array_equal(out["b"], vals["b"][order])
+
+
+@pytest.mark.slow
+def test_oocsort_spill_engine_parity(rng):
+    """Spilled kernel-engine chunk sorts == spilled argsort-engine, bytewise."""
+    x = entropy_keys(rng, 4 * CHUNK, 2)
+    a = oocsort(x, CHUNK, cfg=TCFG, engine="argsort", tile=32,
+                device_slab_elems=128)
+    k = oocsort(x, CHUNK, cfg=TCFG, engine="kernel", tile=32,
+                device_slab_elems=128)
+    assert a.tobytes() == k.tobytes()
+    assert np.array_equal(a, np.sort(x))
+
+
+def test_oocsort_spill_link_byte_formula(rng):
+    """Host-byte accounting matches the §5 formula exactly: the chunk phase
+    crosses 2·N·b and every spilled round adds 2·N·b (16 = 4² runs: no
+    leftover groups anywhere)."""
+    n = 16 * 64
+    x = rng.integers(0, 2**32, n, dtype=np.uint32)
+    out, st = oocsort(x, 64, engine="argsort", kway=4, tile=8,
+                      device_slab_elems=32, return_stats=True)
+    assert np.array_equal(out, np.sort(x))
+    nb = x.nbytes
+    assert st.num_chunks == 16 and st.rounds_spilled == 2
+    assert st.chunk_link_bytes == 2 * nb
+    assert st.spill_link_bytes == 2 * nb * st.rounds_spilled
+    assert st.h2d_bytes == st.d2h_bytes == nb * (1 + st.rounds_spilled)
+    assert st.h2d_bytes + st.d2h_bytes == \
+        st.chunk_link_bytes + st.spill_link_bytes
+
+    v = np.arange(n, dtype=np.int32)                    # payload doubles b
+    k, p, st = oocsort(x, 64, values=v, engine="argsort", kway=4, tile=8,
+                       device_slab_elems=32, return_stats=True)
+    assert st.chunk_link_bytes == 2 * (nb + v.nbytes)
+    assert st.spill_link_bytes == 2 * (nb + v.nbytes) * st.rounds_spilled
+
+
+def test_oocsort_spill_leftover_runs_skip_crossings(rng):
+    """Single-run leftover groups carry over host-side for free: their
+    round's crossings exclude them, exactly."""
+    n = 5 * 64                                          # 5 runs, kway=4
+    x = rng.integers(0, 2**32, n, dtype=np.uint32)
+    out, st = oocsort(x, 64, engine="argsort", kway=4, tile=8,
+                      device_slab_elems=32, return_stats=True)
+    assert np.array_equal(out, np.sort(x))
+    assert st.num_chunks == 5 and st.rounds_spilled == 2
+    # round 1: only the 4-run group (256 keys) streams; round 2: both runs
+    assert st.spill_link_bytes == 2 * (256 * 4) + 2 * (320 * 4)
+
+
+def test_oocsort_spill_stats_defaults(rng):
+    """Device-resident sorts report zeroed spill fields and a high-water
+    mark that scales with the whole input (the footprint spill removes)."""
+    x = rng.integers(0, 2**32, 8 * CHUNK, dtype=np.uint32)
+    out, st = oocsort(x, CHUNK, tile=32, return_stats=True)
+    assert st.rounds_spilled == 0 and st.spill_slab_elems == 0
+    assert st.spill_link_bytes == 0
+    assert st.chunk_link_bytes == 2 * x.nbytes
+    assert st.device_high_water_bytes > x.nbytes        # flat ping-pong pair
+
+
+def test_oocsort_spill_validation():
+    x = np.zeros(64, np.uint32)
+    with pytest.raises(ValueError, match="spill_budget_bytes"):
+        oocsort(x, 16, spill_budget_bytes=0)
+    with pytest.raises(ValueError, match="too small"):
+        oocsort(x, 16, tile=32, spill_budget_bytes=100)
+    with pytest.raises(ValueError, match="device_slab_elems"):
+        oocsort(x, 16, tile=32, device_slab_elems=8)
+
+
+def test_oocsort_spill_validation_is_input_independent():
+    """A misconfigured slab/budget must fail on empty inputs too, not only
+    on the first non-empty batch of a pipeline."""
+    empty = np.empty(0, np.uint32)
+    with pytest.raises(ValueError, match="device_slab_elems"):
+        oocsort(empty, 16, tile=32, device_slab_elems=8)
+    with pytest.raises(ValueError, match="too small"):
+        oocsort(empty, 16, tile=32, spill_budget_bytes=100)
+    out = oocsort(empty, 16, tile=32, device_slab_elems=64)   # valid: fine
+    assert out.shape == (0,)
+
+
+def test_oocsort_spill_budget_is_hard_even_when_tight(rng):
+    """The budget is a HARD ceiling at every accepted size: tight budgets
+    where the pad tile and descriptor tables rival the slab payload must
+    either shrink the slab to fit or refuse — never silently overshoot."""
+    x = rng.integers(0, 2**32, 2000, dtype=np.uint32)
+    with pytest.raises(ValueError, match="too small"):     # < one-tile peak
+        oocsort(x, 1 << 20, engine="argsort", tile=8, spill_budget_bytes=300)
+    for budget in (650, 2000):
+        out, st = oocsort(x, 1 << 20, engine="argsort", tile=8,
+                          spill_budget_bytes=budget, return_stats=True)
+        assert np.array_equal(out, np.sort(x))
+        assert st.device_high_water_bytes <= budget, budget
+
+
+def test_oocsort_spill_budget_models_kernel_engine_padding(rng):
+    """Kernel-engine chunk sorts allocate pad_length(n, kpb)-sized ping-pong
+    pairs; a budget far below that must refuse rather than let real device
+    allocations overshoot while the ledger reports compliance."""
+    x = rng.integers(0, 2**32, 512, dtype=np.uint32)
+    with pytest.raises(ValueError, match="chunk phase"):
+        # default cfg: kpb=3456 -> ~110 KB modeled for even a 1-elem chunk
+        oocsort(x, 256, engine="kernel", tile=16, spill_budget_bytes=4096)
+    # a small-kpb cfg fits the same budget, honestly accounted
+    out, st = oocsort(x, 256, cfg=TCFG, engine="kernel", tile=16,
+                      spill_budget_bytes=8192, return_stats=True)
+    assert np.array_equal(out, np.sort(x))
+    assert st.device_high_water_bytes <= 8192
+
+
+def test_oocsort_spill_explicit_slab_with_roomy_budget(rng):
+    """A valid explicit slab must not be rejected just because a (large)
+    budget is also given: only the budget-DERIVED slab needs the 2-tile
+    footprint headroom."""
+    x = rng.integers(0, 2**32, 400, dtype=np.uint32)
+    out, st = oocsort(x, 100, engine="argsort", tile=32,
+                      device_slab_elems=32, spill_budget_bytes=1 << 30,
+                      return_stats=True)
+    assert np.array_equal(out, np.sort(x))
+    assert st.spill_slab_elems == 32
+    assert st.device_high_water_bytes <= 1 << 30
+    # ... and under a TIGHT budget the explicit slab's own modeled peak is
+    # what decides, not the derived-slab reservation
+    out, st = oocsort(x, 100, engine="argsort", tile=32,
+                      device_slab_elems=32, spill_budget_bytes=2000,
+                      return_stats=True)
+    assert np.array_equal(out, np.sort(x))
+    assert st.spill_slab_elems == 32
+    assert st.device_high_water_bytes <= 2000
+
+
+def test_length_bucketing_spill_route(rng):
+    """The spill options thread through data.pipeline: same packing contract
+    as the device-resident ooc route."""
+    from repro.data import length_bucketed_batches
+    lengths = rng.integers(1, 512, 600)
+    order, bounds = length_bucketed_batches(
+        lengths, batch_tokens=4096, ooc_chunk_elems=128,
+        ooc_spill_budget_bytes=64 * 1024)
+    ref_order, ref_bounds = length_bucketed_batches(lengths,
+                                                    batch_tokens=4096)
+    assert sorted(order.tolist()) == list(range(600))
+    assert bounds == ref_bounds
+    assert np.array_equal(lengths[order], lengths[ref_order])
+    # spill options without the ooc route are a misconfiguration, not a no-op
+    with pytest.raises(ValueError, match="ooc_chunk_elems"):
+        length_bucketed_batches(lengths, batch_tokens=4096,
+                                ooc_spill_budget_bytes=64 * 1024)
 
 
 # ---------------- structural gates (acceptance criteria) --------------------

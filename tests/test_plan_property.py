@@ -158,6 +158,7 @@ def check_next_active_table(hist, local_threshold):
 # --------------------------- hypothesis drivers -----------------------------
 
 if HAVE_HYPOTHESIS:
+    @pytest.mark.slow
     @settings(max_examples=40, deadline=None)
     @given(st.integers(0, 2**32 - 1), st.integers(1, 300),
            st.sampled_from([8, 16, 64]), st.integers(1, 12))
@@ -166,6 +167,7 @@ if HAVE_HYPOTHESIS:
         seg_id, done = random_bucket_state(rng, n, max_segments)
         check_region_blocks(seg_id, done, kpb)
 
+    @pytest.mark.slow
     @settings(max_examples=40, deadline=None)
     @given(st.integers(0, 2**32 - 1), st.integers(1, 6),
            st.sampled_from([4, 16]), st.integers(2, 40))
@@ -176,6 +178,7 @@ if HAVE_HYPOTHESIS:
         hist[rng.random((a, r)) < 0.4] = 0
         check_merge_rows(hist, local_threshold, merge_threshold)
 
+    @pytest.mark.slow
     @settings(max_examples=40, deadline=None)
     @given(st.integers(0, 2**32 - 1), st.integers(1, 8),
            st.sampled_from([4, 16]), st.integers(1, 40))
