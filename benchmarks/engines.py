@@ -82,8 +82,35 @@ def annotate(rows: dict, baseline: str = "argsort",
     return rows
 
 
-def main(fast: bool = True, smoke: bool = False) -> dict:
+def baseline_delta_notes(rows: dict, baseline: dict) -> dict:
+    """Record the ``ratios/...`` movement versus a previous BENCH file.
+
+    For every ratio entry present in both sweeps, append a note with the
+    old/new kernel-row times and the speedup of the kernel engine against
+    its own previous self — the regression meter the per-PR perf gates read
+    (e.g. "n=16384 kernel-sort row must improve >= 1.5x over the PR 4
+    baseline").  Baselines are matched by row name, so re-running a sweep
+    with different sizes only reports the overlap.
+    """
+    notes = rows.setdefault("notes", [])
+    for name, ratio in sorted(rows.items()):
+        if not name.startswith("ratios/") or name not in baseline:
+            continue
+        stem = name[len("ratios/"):]
+        krow = f"{stem}/kernel"
+        if krow in rows and krow in baseline and rows[krow]:
+            speedup = baseline[krow] / rows[krow]
+            notes.append(
+                f"{name}: {baseline[name]:.3f} -> {ratio:.3f} "
+                f"(kernel {baseline[krow]:.0f}us -> {rows[krow]:.0f}us, "
+                f"{speedup:.2f}x vs previous baseline)")
+    return rows
+
+
+def main(fast: bool = True, smoke: bool = False, baseline: dict = None) -> dict:
     rows = collect(fast, smoke=smoke)
+    if baseline:
+        baseline_delta_notes(rows, baseline)
     for name, us in rows.items():
         if name == "notes":
             continue

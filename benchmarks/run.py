@@ -81,7 +81,12 @@ def main() -> None:
 
     if args.json is not None:
         from benchmarks import engines
-        dump(engines.main(fast=not args.full, smoke=args.smoke), args.json)
+        baseline = None
+        if os.path.exists(args.json):        # previous sweep = the baseline:
+            with open(args.json) as f:       # ratio deltas land in `notes`
+                baseline = json.load(f)
+        dump(engines.main(fast=not args.full, smoke=args.smoke,
+                          baseline=baseline), args.json)
 
     if args.ooc:
         from benchmarks import ooc

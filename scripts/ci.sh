@@ -2,7 +2,13 @@
 # CI entry point, staged so the verify loop stays usable:
 #
 #   scripts/ci.sh fast   — fast tier-1 stage only: pytest -m "not slow"
-#                          (the sub-10-minute loop; no benchmarks)
+#                          (the sub-10-minute loop; no benchmarks).
+#                          ZERO failures is the contract: the stage exits
+#                          non-zero on ANY failed or errored test.  The
+#                          pre-existing-failure allowance (10 known model/
+#                          sharding failures tolerated through PR 4) is
+#                          gone — those tests are fixed, not skipped, and
+#                          any new red is a regression.
 #   scripts/ci.sh slow   — the slow-marked suites (hypothesis-heavy property
 #                          walls, large-n sweeps, multi-device subprocess
 #                          tests) + the interpret-mode benchmark smoke pass;

@@ -43,7 +43,8 @@ from jax import lax
 from repro.core import bijection, model, plan
 from repro.core.ranks import stable_partition_dest
 from repro.kernels import fused
-from repro.kernels.ops import apply_run_copies, segmented_local_sort
+from repro.kernels.ops import (apply_run_copies, local_sort_class_plan,
+                               segmented_local_sort)
 
 
 class SortStats(NamedTuple):
@@ -109,7 +110,7 @@ def _counting_pass_fused(state, *, k, d, a_max, g_max, n, cfg, interpret):
     dest_base = asegs.base[:, None] + excl                    # (a_max, r)
     nsid = plan.next_active_table(seg_hist, cfg.local_threshold, a_max)
     blocks = plan.make_region_blocks(asegs.base, asegs.size, n, cfg.kpb,
-                                     g_max)
+                                     g_max, batch=cfg.step_batch)
     sc = plan.digit_window(p, k, d)
     nk, nv, hist_next = fused.fused_counting_pass(
         ck, cv, ak, av, sc, *blocks, dest_base, nsid,
@@ -139,12 +140,15 @@ def _local_sort(ukeys, vals, seg_id, done):
     return ukeys[perm], jax.tree.map(lambda v: v[perm], vals)
 
 
-def _local_sort_kernel(ukeys, vals, seg_id, done, *, s_max, row_len, interpret):
+def _local_sort_kernel(ukeys, vals, seg_id, done, *, s_max, row_len, classes,
+                       interpret):
     """Kernel-engined local sort: done buckets gather into sentinel-padded
-    (S, L) rows (R1 guarantees L <= next_pow2(∂̂)), the stable bitonic kernel
-    sorts each row by (key, position), and the run copies scatter the sorted
-    prefixes back.  Non-done buckets at digit exhaustion hold equal keys, so
-    skipping them matches the jnp engines' stable lexsort exactly.
+    rows binned by power-of-two size class (R1 guarantees the widest class
+    is next_pow2(∂̂); §4.2's local sort configurations keep tiny buckets off
+    worst-case padding), the stable bitonic kernel sorts each class's rows
+    by (key, position), and the run copies scatter the sorted prefixes back.
+    Non-done buckets at digit exhaustion hold equal keys, so skipping them
+    matches the jnp engines' stable lexsort exactly.
     """
     n = ukeys.shape[0]
     boundary = jnp.concatenate([jnp.ones((1,), bool),
@@ -154,7 +158,7 @@ def _local_sort_kernel(ukeys, vals, seg_id, done, *, s_max, row_len, interpret):
     sizes = ends - starts                                     # 0 on padding rows
     sortable = done[jnp.clip(starts, 0, n - 1)] & (starts < n)
     src, dst = segmented_local_sort(ukeys, starts, sizes, sortable, row_len,
-                                    interpret=interpret)
+                                    interpret=interpret, classes=classes)
     return apply_run_copies(src, dst, (ukeys, vals))
 
 
@@ -162,6 +166,16 @@ def _local_row_len(n: int, cfg: model.SortConfig) -> int:
     """Bitonic row width: next power of two covering a done bucket (<= ∂̂)."""
     cap = max(1, min(cfg.local_threshold, n))
     return 1 << (cap - 1).bit_length()
+
+
+def local_sort_classes(n: int, cfg: model.SortConfig):
+    """Static size-class plan of the kernel engine's local sort: the (L,
+    rows) bins of ``ops.local_sort_class_plan`` for this (n, cfg) — also the
+    source of truth for how many bitonic launches the finish stage traces
+    (one per class, the launch-census tests pin ``2 + len(...)`` total).
+    """
+    return local_sort_class_plan(n, _local_row_len(n, cfg),
+                                 model.max_total_buckets(n, cfg))
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "k", "return_stats",
@@ -221,7 +235,8 @@ def _hybrid_sort_bits(ukeys, vals, cfg: model.SortConfig, k: int,
     if engine == "kernel":
         finish = functools.partial(
             _local_sort_kernel, s_max=model.max_total_buckets(n, cfg),
-            row_len=_local_row_len(n, cfg), interpret=interpret)
+            row_len=_local_row_len(n, cfg),
+            classes=local_sort_classes(n, cfg), interpret=interpret)
     else:
         finish = _local_sort
     ukeys, vals = lax.cond(needs_local, finish,

@@ -28,9 +28,9 @@ from repro.kernels import fused
 
 
 @functools.partial(jax.jit, static_argnames=("d", "k", "engine", "kpb",
-                                             "interpret"))
+                                             "step_batch", "interpret"))
 def _lsd_sort_bits(ukeys, vals, d: int, k: int, engine: str, kpb: int,
-                   interpret: bool):
+                   step_batch: int, interpret: bool):
     nd = model.num_digits(k, d)
     udt = ukeys.dtype
     n = ukeys.shape[0]
@@ -44,7 +44,8 @@ def _lsd_sort_bits(ukeys, vals, d: int, k: int, engine: str, kpb: int,
         base = jnp.zeros((1,), jnp.int32)
         size = jnp.full((1,), n, jnp.int32)
         blocks = plan.make_region_blocks(base, size, n, kpb,
-                                         plan.max_region_blocks(n, kpb, 1))
+                                         plan.max_region_blocks(n, kpb, 1),
+                                         batch=step_batch)
         nsid = jnp.zeros((r,), jnp.int32)     # every sub-bucket -> segment 0
         w0 = min(d, k)
         seg_hist = fused.initial_histogram(ck, n, 0, w0, r, 1, kpb,
@@ -78,11 +79,13 @@ def _lsd_sort_bits(ukeys, vals, d: int, k: int, engine: str, kpb: int,
 
 def lsd_sort(keys: jnp.ndarray, values: Any = None, d: int = 5,
              engine: Optional[str] = None, kpb: int = 1024,
-             interpret: Optional[bool] = None):
+             step_batch: int = 8, interpret: Optional[bool] = None):
     """Stable LSD radix sort with ``d``-bit digits (default 5 — the CUB proxy).
 
     ``engine`` is resolved like ``hybrid_sort``'s (``argsort``/``scan``/
-    ``kernel``/``auto``); ``kpb`` is the kernel engine's keys-per-block.
+    ``kernel``/``auto``); ``kpb`` is the kernel engine's keys-per-block and
+    ``step_batch`` its descriptor rows per fused-launch grid step
+    (``plan.pack_region_blocks``).
     """
     if keys.ndim != 1:
         raise ValueError("lsd_sort expects a 1-D key array")
@@ -95,6 +98,7 @@ def lsd_sort(keys: jnp.ndarray, values: Any = None, d: int = 5,
         return keys if values is None else (keys, values)
     ukeys = bijection.to_ordered_bits(keys)
     vals = values if values is not None else ()
-    ukeys, vals = _lsd_sort_bits(ukeys, vals, d, k, engine, kpb, interpret)
+    ukeys, vals = _lsd_sort_bits(ukeys, vals, d, k, engine, kpb, step_batch,
+                                 interpret)
     out = bijection.from_ordered_bits(ukeys, keys.dtype)
     return out if values is None else (out, vals)

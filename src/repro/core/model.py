@@ -19,12 +19,16 @@ class SortConfig:
     local_threshold: int = 4224   # ∂̂ — buckets <= this are locally sorted
     merge_threshold: int = 3000   # ∂ — merge runs of sub-buckets below this
     rank_engine: str = "auto"  # pass engine default (see core.ranks.resolve_engine)
+    step_batch: int = 8        # descriptor rows per fused-launch grid step
+                               # (plan.pack_region_blocks super-step width)
 
     def __post_init__(self):
         if not (0 < self.d <= 16):
             raise ValueError("d must be in (0, 16]")
         if self.merge_threshold > self.local_threshold:
             raise ValueError("requires ∂ <= ∂̂ (R3)")
+        if self.step_batch < 1:
+            raise ValueError("step_batch must be >= 1")
 
     @property
     def radix(self) -> int:

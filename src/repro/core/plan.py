@@ -9,7 +9,9 @@ and the distributed sort's shard partitioning — needs the same plumbing:
     (``active_segments`` — the JAX analogue of the paper's bucket lists),
   * block descriptor tables that chop segments AND the done gaps between
     them into KPB blocks for the constant-size fused launch (§4.2,
-    ``make_region_blocks``),
+    ``make_region_blocks``), packed into fixed-width super-steps of B rows
+    per grid step (``pack_region_blocks``) so the launch grid is
+    ⌈g_max/B⌉,
   * R3 merge bookkeeping (``merge_rows``) and the positional segment/done
     updates after a pass (``apply_pass_bookkeeping``),
   * the (sub-bucket -> next-pass active segment) map that keys the fused
@@ -45,10 +47,14 @@ class ActiveSegments(NamedTuple):
 class RegionBlocks(NamedTuple):
     """Block descriptor tables for one fused launch (§4.2, model M4/I4).
 
-    One row per grid step: active segments are partitioned, the done gaps
+    One row per descriptor: active segments are partitioned, the done gaps
     between them are copied through, so one launch rewrites the whole
     ping-pong buffer.  Padding rows (beyond the pass's real block count)
-    carry ``count == 0`` and scatter nothing.
+    carry ``count == 0`` and scatter nothing.  Tables are either flat (G,)
+    — one row per grid step — or packed (G', B) super-steps
+    (``pack_region_blocks``): grid step g then loops over its B rows in
+    order, which shrinks the launch grid B-fold without touching the carry
+    chains (rows stay in descriptor order).
     """
     seg: jnp.ndarray     # (G,) compact active-segment id; a_max for copies/pads
     offset: jnp.ndarray  # (G,) absolute offset of the block's first key
@@ -130,14 +136,50 @@ def max_region_blocks(n: int, kpb: int, a_max: int) -> int:
     return n // kpb + 2 * a_max + 2
 
 
+def pack_region_blocks(blocks: RegionBlocks, batch: int,
+                       seg_pad: int = None) -> RegionBlocks:
+    """Pack flat descriptor rows into fixed-width (G', B) super-steps (§4.2).
+
+    The paper over-decomposes buckets into equal blocks so thread blocks do
+    equal work; the fused launch's analogue is the flat descriptor table —
+    but one row per grid step pays the per-step launch machinery ``g_max``
+    times.  Packing groups B *consecutive* rows per grid step instead.
+    Consecutive-in-order is the compatibility rule that keeps every segment's
+    carry chain intact: a region's blocks occupy consecutive rows, the kernel
+    walks each super-step's rows sequentially, and the grid itself is
+    sequential — so the in-segment running offset accumulates across
+    super-step boundaries exactly as before.  The tail pads with inert rows
+    (count 0, copy-through, carry-reset) which sit after every real row, so
+    a reset there never clips a live carry; ``seg_pad`` is the tail's seg
+    value — pass ``a_max`` to keep the flat table's pad convention (seg ==
+    a_max marks copies/pads), as ``make_region_blocks`` does.
+    """
+    if batch < 1:
+        raise ValueError("batch must be >= 1")
+    g = blocks.seg.shape[0]
+    pad = (-g) % batch
+    fills = dict(seg=0 if seg_pad is None else seg_pad, offset=0, reset=1,
+                 count=0, active=0)
+    packed = {}
+    for name, fill in fills.items():
+        t = getattr(blocks, name)
+        if pad:
+            t = jnp.concatenate([t, jnp.full((pad,), fill, t.dtype)])
+        packed[name] = t.reshape(-1, batch)
+    return RegionBlocks(**packed)
+
+
 def make_region_blocks(base: jnp.ndarray, size: jnp.ndarray, n: int, kpb: int,
-                       g_max: int) -> RegionBlocks:
+                       g_max: int, batch: int = None) -> RegionBlocks:
     """Chop active segments and the done gaps between them into KPB blocks.
 
     ``base``/``size`` are (a_max,) active-segment descriptors (``n``/0 on
     padding rows).  Regions interleave gap_0, active_0, gap_1, ..., tail gap;
     every key position lands in exactly one block, so one fused launch
     rewrites the whole buffer (actives partitioned, gaps copied through).
+    With ``batch`` the flat rows are additionally packed into (⌈g_max/batch⌉,
+    batch) super-steps (``pack_region_blocks``) — the batched-grid form the
+    fused kernel consumes.
     """
     a_max = base.shape[0]
     nreg = 2 * a_max + 1
@@ -177,11 +219,14 @@ def make_region_blocks(base: jnp.ndarray, size: jnp.ndarray, n: int, kpb: int,
     seg = jnp.where(valid & (ract[reg] == 1), rseg[reg], a_max)
     active = jnp.where(valid, ract[reg], 0)
     reset = jnp.where(valid, (blk_in_reg == 0).astype(jnp.int32), 1)
-    return RegionBlocks(seg=seg.astype(jnp.int32),
-                        offset=offset.astype(jnp.int32),
-                        reset=reset.astype(jnp.int32),
-                        count=count.astype(jnp.int32),
-                        active=active.astype(jnp.int32))
+    blocks = RegionBlocks(seg=seg.astype(jnp.int32),
+                          offset=offset.astype(jnp.int32),
+                          reset=reset.astype(jnp.int32),
+                          count=count.astype(jnp.int32),
+                          active=active.astype(jnp.int32))
+    if batch is None:
+        return blocks
+    return pack_region_blocks(blocks, batch, seg_pad=a_max)
 
 
 def merge_rows(hist: jnp.ndarray, local_threshold: int, merge_threshold: int):
@@ -252,7 +297,7 @@ def apply_pass_bookkeeping(seg_id, done, asegs: ActiveSegments, hist,
 
 def single_pass_partition(ids: jnp.ndarray, num_buckets: int,
                           engine: str = None, interpret: bool = None,
-                          kpb: int = 1024):
+                          kpb: int = 1024, step_batch: int = 8):
     """One engine-selected stable counting pass over flat bucket ids.
 
     The primitive under ``segmented.counting_partition`` (MoE dispatch,
@@ -286,7 +331,8 @@ def single_pass_partition(ids: jnp.ndarray, num_buckets: int,
     base_excl = jnp.cumsum(hist0, axis=1) - hist0            # base 0
     blocks = make_region_blocks(jnp.zeros((1,), jnp.int32),
                                 jnp.full((1,), m, jnp.int32), m, kpb,
-                                max_region_blocks(m, kpb, 1))
+                                max_region_blocks(m, kpb, 1),
+                                batch=step_batch)
     sc = jnp.asarray([0, width, 0, 0], jnp.int32)
     nsid = jnp.zeros((r,), jnp.int32)
     _, (perm_pad,), _ = fused.fused_counting_pass(

@@ -82,7 +82,8 @@ from repro.kernels.merge import (host_coranks, kway_merge_round,
                                  merge_path_partition, num_merge_rounds,
                                  spill_group_plan)
 from repro.kernels.ops import (apply_run_copies, kernel_local_sort,
-                               segmented_local_sort, tile_histogram_pass)
+                               local_sort_class_plan, segmented_local_sort,
+                               tile_histogram_pass)
 
 __all__ = [
     "radix_histogram", "tile_multisplit", "tile_multisplit_kv",
@@ -91,6 +92,6 @@ __all__ = [
     "fused_counting_pass", "initial_histogram", "make_ping_pong", "pad_length",
     "host_coranks", "kway_merge_round", "merge_path_partition",
     "num_merge_rounds", "spill_group_plan",
-    "apply_run_copies", "kernel_local_sort", "segmented_local_sort",
-    "tile_histogram_pass",
+    "apply_run_copies", "kernel_local_sort", "local_sort_class_plan",
+    "segmented_local_sort", "tile_histogram_pass",
 ]

@@ -17,7 +17,8 @@ a counting pass — and the first step of the next pass — into one kernel:
 ``fused_counting_pass`` is that launch.  One call per pass:
 
   grid step g (sequential on TPU, so in-segment carries live in an
-  accumulator):
+  accumulator) loops over the B block descriptors packed into its super-step
+  (see *Batched grid steps* below); for each descriptor row:
     1. load the assigned KPB-block of keys (+ value slabs) from the *current*
        ping-pong buffer at a dynamic offset,
     2. extract the pass digit at a scalar-prefetched (lo, width) window —
@@ -38,6 +39,24 @@ oracles; ``repro.core.plan`` builds the descriptor tables.  On this CPU
 container the kernel runs in interpret mode; on real hardware the dynamic
 per-lane scatter of step 5 is realised as the r coalesced run copies of §4.4
 (one static-size masked store per digit run) and the tables live in SMEM.
+
+Batched grid steps (§4.2's over-decomposition, amortised)
+---------------------------------------------------------
+The descriptor tables arrive packed (``plan.pack_region_blocks``) as
+(G', B) super-steps: grid step g owns the B consecutive descriptor rows
+``[g*B, (g+1)*B)`` — padding rows on the masked tail carry ``count == 0``
+and scatter nothing.  The kernel *vectorises* the super-step: B stacked
+block loads, one batched (B, KPB, r) one-hot rank cumsum, one flattened
+scatter per operand; only the in-segment carries run as a sequential
+(r,)-vector recurrence over the B rows.  Packing rows *in descriptor order*
+is what keeps every segment's carry chain intact: the blocks of one region
+are consecutive rows, the TPU grid is sequential, and the in-step
+recurrence is sequential, so the in-segment running offset accumulates
+across rows and super-steps exactly as it did with one row per step.  The
+launch-census invariant is untouched — one pass is still ONE ``pallas_call``
+— but the grid shrinks from ``g_max`` to ``⌈g_max/B⌉``, dividing the
+per-grid-step launch machinery by B and batching the rank compute into
+fewer, larger ops (the actual interpret-mode win on this container).
 
 Memory-transfer accounting per pass over n keys (k-bit, v-bit values):
   unfused (histogram launch + scatter launch):  keys 2R+1W, values 1R+1W
@@ -109,8 +128,9 @@ def initial_histogram(buf_keys: jnp.ndarray, n: int, lo: int, width: int,
 
 def _fused_pass_kernel(sc_ref, seg_ref, off_ref, reset_ref, cnt_ref, act_ref,
                        *refs, kpb: int, r: int, a_max: int, n: int,
-                       num_vals: int):
-    """One grid step = one block descriptor row (see module docstring)."""
+                       num_vals: int, batch: int):
+    """One grid step = one packed super-step of ``batch`` descriptor rows
+    (see module docstring)."""
     srck_ref = refs[0]
     srcv_refs = refs[1:1 + num_vals]
     # refs[1+num_vals : 1+2*num_vals+1] are the aliased alternate buffers —
@@ -129,60 +149,73 @@ def _fused_pass_kernel(sc_ref, seg_ref, off_ref, reset_ref, cnt_ref, act_ref,
         hist_ref[...] = jnp.zeros_like(hist_ref)
         carry_ref[...] = jnp.zeros_like(carry_ref)
 
-    a = seg_ref[g]                               # compact active idx (or a_max)
-    off = off_ref[g]                             # first key of the block
-    cnt = cnt_ref[g]                             # live lanes in the block
-    act = act_ref[g]                             # 1 = partition, 0 = copy-through
-    reset = reset_ref[g]                         # 1 = first block of its region
-
-    keys = srck_ref[pl.ds(off, kpb)]             # ONE read of the pass (§4.3)
-    kdt = keys.dtype
+    kdt = srck_ref.dtype
     one = jnp.ones((), kdt)
     lane = jax.lax.iota(jnp.int32, kpb)
-    lv = lane < cnt
-
-    # pass digit at the scalar-prefetched window — no pre-shifted key copies
+    # pass digit windows at the scalar-prefetched slots — no pre-shifted keys
     lo = sc_ref[0].astype(kdt)
     width = sc_ref[1].astype(kdt)
+    nlo = sc_ref[2].astype(kdt)
+    nwidth = sc_ref[3].astype(kdt)
+
+    # per-row descriptors of the super-step, vectorised over the B rows
+    a = seg_ref[g]                               # compact active idx (or a_max)
+    off = off_ref[g]                             # first key per block
+    cnt = cnt_ref[g]                             # live lanes (0 = padding row)
+    act = act_ref[g]                             # 1 = partition, 0 = copy
+    reset = reset_ref[g]                         # 1 = first block of region
+
+    # B block loads (the ONE key read of the pass, §4.3), stacked (B, kpb)
+    keys = jnp.stack([srck_ref[pl.ds(off[j], kpb)] for j in range(batch)])
+    lv = lane[None, :] < cnt[:, None]
     digit = ((keys >> lo) & ((one << width) - one)).astype(jnp.int32)
 
-    # stable in-block rank per digit + block histogram (§4.4's counters)
-    iota_r = jax.lax.broadcasted_iota(jnp.int32, (kpb, r), 1)
-    onehot = ((digit[:, None] == iota_r) & lv[:, None]).astype(jnp.int32)
-    incl = jnp.cumsum(onehot, axis=0)
-    hv = incl[kpb - 1]                                           # (r,)
-    excl = incl - onehot
+    # stable in-block rank per digit + per-row block histograms (§4.4's
+    # write counters), ONE batched one-hot cumsum for the whole super-step
+    iota_r = jax.lax.broadcasted_iota(jnp.int32, (batch, kpb, r), 2)
+    onehot = ((digit[:, :, None] == iota_r) & lv[:, :, None]).astype(jnp.int32)
+    incl = jnp.cumsum(onehot, axis=1)
+    hv = incl[:, kpb - 1, :]                                     # (B, r)
+    rank = jnp.take_along_axis(incl, digit[:, :, None], axis=2)[..., 0] - 1
+
+    # in-segment carry chain across the packed rows: rows stay in descriptor
+    # order, so a tiny sequential (r,)-vector recurrence over the B rows —
+    # reset on region firsts — extends the cross-step accumulator exactly
+    asafe = jnp.clip(a, 0, a_max - 1)
+    carry = carry_ref[...]
+    row_carries = []
+    for j in range(batch):
+        carry = jnp.where(reset[j] == 1, jnp.zeros((r,), jnp.int32), carry)
+        row_carries.append(carry)
+        carry = carry + hv[j]
+    carry_ref[...] = carry
+    base_rows = bexcl_ref[asafe] + jnp.stack(row_carries)        # (B, r)
 
     # destination: segment base + in-segment digit offset (fused out of the
     # previous pass) + in-segment block carry + in-block rank
-    asafe = jnp.clip(a, 0, a_max - 1)
-    carry_prev = jnp.where(reset == 1, jnp.zeros((r,), jnp.int32),
-                           carry_ref[...])
-    base_row = bexcl_ref[asafe] + carry_prev                     # (r,)
-    dest_part = jnp.sum(onehot * (base_row[None, :] + excl), axis=1,
-                        dtype=jnp.int32)
-    gidx = off + lane
-    dest = jnp.where(lv, jnp.where(act == 1, dest_part, gidx), n)
+    dest_part = jnp.take_along_axis(base_rows, digit, axis=1) + rank
+    gidx = off[:, None] + lane[None, :]
+    dest = jnp.where(lv, jnp.where(act[:, None] == 1, dest_part, gidx), n)
 
-    # ONE write of the pass: on TPU these per-lane stores lower to the r
-    # coalesced per-digit run copies of §4.4 (keys are run-contiguous per
-    # digit after ranking); slot n swallows masked lanes.
-    dstk_ref[dest] = keys
+    # ONE write of the pass, a single flattened scatter for all B rows: on
+    # TPU these per-lane stores lower to the r coalesced per-digit run
+    # copies of §4.4 (keys are run-contiguous per digit after ranking);
+    # slot n swallows masked lanes.
+    flat_dest = dest.reshape(-1)
+    dstk_ref[flat_dest] = keys.reshape(-1)
     for sv_ref, dv_ref in zip(srcv_refs, dstv_refs):
-        dv_ref[dest] = sv_ref[pl.ds(off, kpb)]
-    carry_ref[...] = carry_prev + hv
+        vals = jnp.stack([sv_ref[pl.ds(off[j], kpb)] for j in range(batch)])
+        dv_ref[flat_dest] = vals.reshape(-1)
 
     # §4.3 fusion: the digit histogram of pass i+1, keyed by the compact id
     # of the sub-bucket's next-pass segment (a_max rows suffice: R3 makes
     # every next-pass active bucket a single > ∂̂ sub-bucket).
-    nlo = sc_ref[2].astype(kdt)
-    nwidth = sc_ref[3].astype(kdt)
     ndig = ((keys >> nlo) & ((one << nwidth) - one)).astype(jnp.int32)
-    sid = nsid_ref[...][asafe * r + jnp.clip(digit, 0, r - 1)]
-    live = lv & (act == 1) & (sid < a_max) & (sc_ref[3] > 0)
-    flat = jnp.where(live, sid * r + ndig, 0)
+    sid = nsid_ref[...][asafe[:, None] * r + jnp.clip(digit, 0, r - 1)]
+    live = (lv & (act[:, None] == 1) & (sid < a_max) & (sc_ref[3] > 0))
+    flat = jnp.where(live, sid * r + ndig, 0).reshape(-1)
     h = hist_ref[...]
-    hist_ref[...] = h.at[flat].add(live.astype(jnp.int32))
+    hist_ref[...] = h.at[flat].add(live.reshape(-1).astype(jnp.int32))
 
 
 @functools.partial(jax.jit, static_argnames=("kpb", "r", "a_max", "n",
@@ -202,10 +235,14 @@ def fused_counting_pass(src_keys, src_vals, alt_keys, alt_vals, pass_scalars,
                                 replacement),
       pass_scalars            — (4,) int32 [lo, width, next_lo, next_width]
                                 digit windows (``plan.digit_window``),
-      blk_*                   — (G,) int32 block descriptor tables
+      blk_*                   — int32 block descriptor tables
                                 (``plan.make_region_blocks``): compact segment
                                 index (a_max = copy-through), key offset,
-                                carry-reset flag, live-lane count, active flag,
+                                carry-reset flag, live-lane count, active
+                                flag.  Either flat (G,) rows (one per grid
+                                step) or (G', B) super-steps packed by
+                                ``plan.pack_region_blocks`` — the grid is the
+                                leading axis either way,
       base_excl               — (a_max, r) int32 absolute run starts per
                                 (active segment, digit): base + exclusive scan
                                 of the carried histogram,
@@ -219,7 +256,11 @@ def fused_counting_pass(src_keys, src_vals, alt_keys, alt_vals, pass_scalars,
     order.  Exactly one ``pallas_call`` in the trace — the property the
     launch-counter regression test pins down.
     """
-    g_max = blk_seg.shape[0]
+    if blk_seg.ndim == 1:                    # flat rows = B=1 super-steps
+        blk_seg, blk_off, blk_reset, blk_count, blk_active = (
+            t.reshape(-1, 1)
+            for t in (blk_seg, blk_off, blk_reset, blk_count, blk_active))
+    g_steps, batch = blk_seg.shape
     num_vals = len(src_vals)
     n_pad = src_keys.shape[0]
 
@@ -241,10 +282,10 @@ def fused_counting_pass(src_keys, src_vals, alt_keys, alt_vals, pass_scalars,
 
     out = pl.pallas_call(
         functools.partial(_fused_pass_kernel, kpb=kpb, r=r, a_max=a_max,
-                          n=n, num_vals=num_vals),
+                          n=n, num_vals=num_vals, batch=batch),
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=6,
-            grid=(g_max,),
+            grid=(g_steps,),
             in_specs=in_specs,
             out_specs=out_specs,
         ),

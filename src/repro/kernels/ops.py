@@ -49,32 +49,80 @@ def kernel_local_sort(keys: jnp.ndarray, interpret: bool = True) -> jnp.ndarray:
     return bitonic_sort_rows(keys, interpret=interpret)
 
 
-@functools.partial(jax.jit, static_argnames=("row_len", "interpret"))
+def local_sort_class_plan(n: int, row_len: int, s_max: int,
+                          min_len: int = 32):
+    """Power-of-two size classes for the local sort (§4.2's *local sort
+    configurations*): ``((L_0, rows_0), (L_1, rows_1), ...)``.
+
+    Class widths double from ``min_len`` up to ``row_len``; a bucket of size
+    s sorts in the narrowest class with ``L >= s`` (class 0 additionally
+    catches every bucket ``<= min_len``), so tiny done-buckets stop paying
+    ∂̂-sized padding.  Row capacities are static counting bounds: a bucket in
+    class i > 0 holds more than ``L_i/2`` keys, so at most
+    ``n // (L_i/2 + 1) + 1`` such buckets exist; class 0 is bounded only by
+    the total bucket count ``s_max``.  The capacities are what make one
+    fixed-shape ``_rows_call`` per class possible under XLA's static shapes.
+    """
+    row_len = max(1, row_len)
+    l = min(row_len, max(1, min_len))
+    classes = [(l, max(1, s_max))]
+    while l < row_len:
+        l *= 2
+        cap = n // (l // 2 + 1) + 1
+        classes.append((l, max(1, min(s_max, cap))))
+    return tuple(classes)
+
+
+@functools.partial(jax.jit, static_argnames=("row_len", "interpret",
+                                             "classes"))
 def segmented_local_sort(keys: jnp.ndarray, seg_start: jnp.ndarray,
                          seg_size: jnp.ndarray, seg_sortable: jnp.ndarray,
-                         row_len: int, interpret: bool = True):
+                         row_len: int, interpret: bool = True,
+                         classes=None):
     """Finish flagged buckets in one read+write via the stable bitonic kernel.
 
-    Gathers each flagged segment into a sentinel-padded (S, L) row, sorts rows
-    by (key, global index) — so pads (index n) lose every tie and the order is
+    Gathers each flagged segment into a sentinel-padded row, sorts rows by
+    (key, global index) — so pads (index n) lose every tie and the order is
     stable — and returns (src, dst) run copies that place the sorted prefix
     back over the segment.  Unflagged segments are untouched (their lanes
     return ``dst == n``).
+
+    ``classes`` is an optional size-class plan (``local_sort_class_plan``):
+    segments are binned into power-of-two row widths — one fixed-shape
+    bitonic launch per class — so a 3-key bucket sorts in a ``min_len`` row
+    instead of a ``row_len`` one.  ``None`` keeps the single worst-case
+    table: one class of width ``row_len`` with a row per segment slot.
     """
     n = keys.shape[0]
-    lane = jnp.arange(row_len, dtype=jnp.int32)
-    gidx = seg_start[:, None] + lane[None, :]                 # (S, L)
-    lv = seg_sortable[:, None] & (lane[None, :] < seg_size[:, None])
-    safe = jnp.clip(gidx, 0, max(n - 1, 0))
+    s = seg_start.shape[0]
+    if classes is None:
+        classes = ((row_len, s),)
     sentinel = ~jnp.zeros((), keys.dtype)
-    rows = jnp.where(lv, keys[safe], sentinel)
-    idx = jnp.where(lv, gidx, n).astype(jnp.int32)
+    srcs, dsts = [], []
+    prev_l = -1                    # class 0 catches every size <= its width
+    for l, rows in classes:
+        in_cls = seg_sortable & (seg_size <= l) & (seg_size > prev_l)
+        rsel = jnp.nonzero(in_cls, size=min(rows, s), fill_value=s)[0]
+        sel = jnp.clip(rsel, 0, s - 1)
+        valid = rsel < s
+        starts_c = jnp.where(valid, seg_start[sel], n)
+        sizes_c = jnp.where(valid, seg_size[sel], 0)
 
-    _, si = bitonic_sort_rows_stable(rows, idx, interpret=interpret)
+        lane = jnp.arange(l, dtype=jnp.int32)
+        gidx = starts_c[:, None] + lane[None, :]              # (rows, L)
+        lv = lane[None, :] < sizes_c[:, None]
+        safe = jnp.clip(gidx, 0, max(n - 1, 0))
+        row_keys = jnp.where(lv, keys[safe], sentinel)
+        idx = jnp.where(lv, gidx, n).astype(jnp.int32)
 
-    # valid lanes form each row's prefix both before and after the sort
-    dst = jnp.where(lv, gidx, n)
-    return si.reshape(-1), dst.reshape(-1)
+        _, si = bitonic_sort_rows_stable(row_keys, idx, interpret=interpret)
+
+        # valid lanes form each row's prefix both before and after the sort
+        dst = jnp.where(lv, gidx, n)
+        srcs.append(si.reshape(-1))
+        dsts.append(dst.reshape(-1))
+        prev_l = l
+    return jnp.concatenate(srcs), jnp.concatenate(dsts)
 
 
 def tile_histogram_pass(keys: jnp.ndarray, shift: int, width: int,

@@ -18,6 +18,21 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.launch.mesh import data_axes
 
 
+def _norm_axis(axis):
+    """Collapse single-element axis tuples to the bare name.
+
+    ``data_axes(mesh)`` returns a tuple so pod composes with data, but a
+    one-axis mesh partition must read ``P(None, 'data', None)`` — the
+    canonical spec every consumer (and ``PartitionSpec`` equality) expects —
+    not ``P(None, ('data',), None)``.  Multi-axis tuples pass through.
+    """
+    if isinstance(axis, tuple):
+        if len(axis) == 1:
+            return axis[0]
+        return axis if axis else None
+    return axis
+
+
 def _div(n: int, mesh, axis) -> bool:
     size = 1
     for a in (axis if isinstance(axis, tuple) else (axis,)):
@@ -35,7 +50,7 @@ def param_spec(path: str, shape, cfg, mesh) -> P:
     dims = list(shape[1:] if stacked else shape)
 
     def out(*spec):
-        spec = list(spec) + [None] * (len(dims) - len(spec))
+        spec = [_norm_axis(s) for s in spec] + [None] * (len(dims) - len(spec))
         return P(*( [None] + spec if stacked else spec ))
 
     fsdp = cfg.fsdp_params
@@ -122,10 +137,11 @@ def param_shardings(params_shape, cfg, mesh):
 def batch_specs(cfg, mesh, shape_cfg) -> Any:
     dp = data_axes(mesh)
     b = shape_cfg.global_batch
-    tok = P(dp, None) if _div(b, mesh, dp) else P()
+    dpn = _norm_axis(dp)
+    tok = P(dpn, None) if _div(b, mesh, dp) else P()
     out = {"tokens": tok}
     if cfg.frontend == "vision_patches":
-        out["patches"] = P(dp, None, None) if _div(b, mesh, dp) else P()
+        out["patches"] = P(dpn, None, None) if _div(b, mesh, dp) else P()
     return out
 
 
@@ -138,19 +154,20 @@ def cache_specs(cfg, mesh, batch: int, max_len: int):
     kv_ok = cfg.n_kv_heads and _div(cfg.n_kv_padded, mesh, "model")
     kv_k = kv_v = ssm_state = ssm_conv = None
     if cfg.has_attention:
-        bspec = dp if b_ok else None
+        bspec = _norm_axis(dp) if b_ok else None
         hspec = "model" if kv_ok else None
         # sequence picks up every axis not used by batch/heads (flash-decode
         # partial-KV layout: each model shard holds a slice of history)
         seq_axes = tuple(a for ok, axes in ((b_ok, dp), (kv_ok, ("model",)))
                          if not ok for a in axes)
-        sspec = seq_axes if seq_axes and _div(max_len, mesh, seq_axes) else None
+        sspec = (_norm_axis(seq_axes)
+                 if seq_axes and _div(max_len, mesh, seq_axes) else None)
         kv_k = kv_v = P(None, bspec, sspec, hspec, None)
     if cfg.has_ssm:
         h_ok = _div(cfg.ssm_heads, mesh, "model")
-        ssm_state = P(None, dp if b_ok else None, "model" if h_ok else None,
-                      None, None)
-        ssm_conv = P(None, dp if b_ok else None, None, None)
+        bs = _norm_axis(dp) if b_ok else None
+        ssm_state = P(None, bs, "model" if h_ok else None, None, None)
+        ssm_conv = P(None, bs, None, None)
     from repro.models import DecodeCache
     return DecodeCache(kv_k, kv_v, ssm_state, ssm_conv, P())
 

@@ -16,9 +16,31 @@ def dense_init(key, in_dim: int, out_dim: int, dtype, scale: float = 0.02):
     return (jax.random.normal(key, (in_dim, out_dim), jnp.float32) * scale).astype(dtype)
 
 
+def abstract_mesh():
+    """``jax.sharding.get_abstract_mesh`` across jax versions (shim).
+
+    Newer jax exposes the trace-time mesh directly; older releases (like the
+    ``jax.shard_map``/``check_vma`` split handled in
+    ``core.distributed._shard_map``) only know the physical mesh bound by the
+    ``with mesh:`` context, reachable through ``thread_resources``.  Returns
+    ``None`` when no mesh is bound either way, so the layer helpers below
+    degrade to their off-mesh no-ops on every version.
+    """
+    fn = getattr(jax.sharding, "get_abstract_mesh", None)
+    if fn is not None:
+        am = fn()
+        return am if am and am.axis_names else None
+    try:
+        from jax._src.mesh import thread_resources
+    except ImportError:                     # pragma: no cover - very old jax
+        return None
+    mesh = thread_resources.env.physical_mesh
+    return mesh if mesh.axis_names else None
+
+
 def dp_axes():
     """Batch-carrying mesh axes visible at trace time (() off-mesh)."""
-    am = jax.sharding.get_abstract_mesh()
+    am = abstract_mesh()
     names = tuple(am.axis_names or ()) if am else ()
     return tuple(a for a in ("pod", "data") if a in names)
 
@@ -29,7 +51,7 @@ def constrain(x, spec):
     Layers stay mesh-agnostic: constraints bind only when the launcher traces
     under ``jax.set_mesh`` (axis names resolved from the abstract mesh).
     """
-    am = jax.sharding.get_abstract_mesh()
+    am = abstract_mesh()
     names = set(am.axis_names or ()) if am else set()
     used = {a for part in spec if part is not None
             for a in (part if isinstance(part, tuple) else (part,))}

@@ -180,8 +180,10 @@ def launch_census(jaxpr) -> Dict[str, object]:
     counts.
 
     The two structural invariants of the sort pipelines read straight off
-    this: the fused hybrid engine traces to ``{"total": 3, "while_bodies":
-    [1]}`` (prologue + ONE launch per counting pass + local sort), and every
+    this: the fused hybrid engine traces to ``{"total": 2 +
+    len(core.hybrid.local_sort_classes(n, cfg)), "while_bodies": [1]}``
+    (prologue + ONE launch per counting pass + one bitonic launch per
+    local-sort size class), and every
     out-of-core merge *round* — a host-driven jit with no device loop —
     traces to ``{"total": 1, "while_bodies": []}``: one ``pallas_call`` per
     round, ``⌈log_K(runs)⌉`` rounds per sort (§5).  Any binary-search loop
@@ -190,6 +192,28 @@ def launch_census(jaxpr) -> Dict[str, object]:
     """
     return {"total": pallas_launch_count(jaxpr),
             "while_bodies": while_body_pallas_launches(jaxpr)}
+
+
+def pallas_grid_sizes(jaxpr):
+    """Grid shapes of every ``pallas_call`` site, in trace order.
+
+    The batched-step census: packing B block descriptors per grid step
+    (``plan.pack_region_blocks``) must shrink the fused launch's grid from
+    ``g_max`` to ``⌈g_max/B⌉`` *without* changing the launch count — the
+    launch-site invariants above stay as they are, and this counter pins the
+    grid side of the contract.  Each entry is a tuple (the pallas grid), one
+    per launch site found (while/cond/jit bodies are traversed like
+    ``jaxpr_primitive_counts``; a while body's site is counted once).
+    """
+    if hasattr(jaxpr, "jaxpr"):
+        jaxpr = jaxpr.jaxpr
+    out = []
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "pallas_call":
+            out.append(tuple(eqn.params["grid_mapping"].grid))
+        for sub in _sub_jaxprs(eqn):
+            out.extend(pallas_grid_sizes(sub))
+    return out
 
 
 def while_body_pallas_launches(jaxpr):

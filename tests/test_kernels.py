@@ -134,9 +134,64 @@ def test_segmented_local_sort_done_flags(rng):
     assert np.array_equal(out, want)
 
 
+def test_segmented_local_sort_size_classes(rng):
+    """The size-classed plan sorts byte-identically to the single worst-case
+    table, while binning each bucket into the narrowest power-of-two row
+    that fits it (§4.2's local sort configurations)."""
+    from repro.kernels.ops import local_sort_class_plan
+
+    n = 2000
+    x = rng.integers(0, 2**32, n, dtype=np.uint32)
+    x[5] = x[900] = 0xFFFFFFFF                  # collide with the pad value
+    # ragged bucket sizes spanning several classes, incl. 0/1/oversized gaps
+    sizes_np = np.array([3, 1, 60, 0, 500, 17, 130, 33, 256, n], np.int32)
+    starts_np = np.concatenate([[0], np.cumsum(sizes_np)[:-1]]).astype(np.int32)
+    sizes_np[-1] = n - starts_np[-1]            # tail bucket fills the rest
+    flags_np = np.array([1, 1, 1, 1, 1, 0, 1, 1, 1, 1], bool)
+    starts, sizes = jnp.asarray(starts_np), jnp.asarray(sizes_np)
+    flags = jnp.asarray(flags_np)
+    row_len = 1024
+
+    def apply(src, dst):
+        s, d = np.asarray(src), np.asarray(dst)
+        out = x.copy()
+        m = d < n
+        out[d[m]] = x[np.clip(s, 0, n - 1)[m]]
+        return out
+
+    classes = local_sort_class_plan(n, row_len, s_max=len(sizes_np))
+    got = apply(*segmented_local_sort(jnp.asarray(x), starts, sizes, flags,
+                                      row_len, interpret=True,
+                                      classes=classes))
+    ref = apply(*segmented_local_sort(jnp.asarray(x), starts, sizes, flags,
+                                      row_len, interpret=True))
+    want = x.copy()
+    for st_, sz, fl in zip(starts_np, sizes_np, flags_np):
+        if fl and sz:
+            want[st_:st_ + sz] = np.sort(x[st_:st_ + sz])
+    assert np.array_equal(got, want)
+    assert np.array_equal(got, ref)
+
+
+def test_local_sort_class_plan_bounds():
+    """Class widths double from min_len to row_len; capacities are the
+    static counting bounds (class 0: every segment slot; class i: at most
+    n // (L/2 + 1) + 1 buckets can exceed half the width)."""
+    from repro.kernels.ops import local_sort_class_plan
+
+    plan_ = local_sort_class_plan(16384, 1024, s_max=341, min_len=32)
+    widths = [l for l, _ in plan_]
+    assert widths == [32, 64, 128, 256, 512, 1024]
+    assert plan_[0][1] == 341                   # class 0: bounded by s_max
+    for l, rows in plan_[1:]:
+        assert rows == min(341, 16384 // (l // 2 + 1) + 1)
+    # degenerate: row_len below min_len collapses to one legacy-shaped class
+    assert local_sort_class_plan(100, 16, s_max=9) == ((16, 9),)
+
+
 # ------------------- fused counting pass (kernels/fused.py) -----------------
 
-def _run_fused(x, bounds, n, kpb, sc, nsid, a_max, r, vals=()):
+def _run_fused(x, bounds, n, kpb, sc, nsid, a_max, r, vals=(), batch=None):
     """Drive one fused launch over explicit segment bounds; returns the new
     [0, n) key buffer, new value buffers and the fused next-pass histogram."""
     lo = int(sc[0])
@@ -152,7 +207,8 @@ def _run_fused(x, bounds, n, kpb, sc, nsid, a_max, r, vals=()):
     base_excl = (base[:, None] +
                  jnp.cumsum(jnp.asarray(hist), axis=1) - jnp.asarray(hist))
     blocks = plan.make_region_blocks(base, size, n, kpb,
-                                     plan.max_region_blocks(n, kpb, a_max))
+                                     plan.max_region_blocks(n, kpb, a_max),
+                                     batch=batch)
     (ck, cv), (ak, av) = fused.make_ping_pong(jnp.asarray(x), vals, kpb)
     nk, nv, hist_next = fused.fused_counting_pass(
         ck, cv, ak, av, jnp.asarray(sc, jnp.int32), *blocks, base_excl,
@@ -162,14 +218,17 @@ def _run_fused(x, bounds, n, kpb, sc, nsid, a_max, r, vals=()):
             np.asarray(hist_next).reshape(a_max, r))
 
 
-def test_fused_pass_partitions_segments_and_copies_gaps(rng):
+@pytest.mark.parametrize("batch", [None, 1, 3, 8])
+def test_fused_pass_partitions_segments_and_copies_gaps(rng, batch):
     """One launch partitions every active segment in place (stably, by the
-    scalar-windowed digit) and copies the done gaps through untouched."""
+    scalar-windowed digit) and copies the done gaps through untouched —
+    identically for flat descriptor rows and packed (G', B) super-steps
+    (including a non-dividing B with masked tail rows)."""
     n = 3000
     x = rng.integers(0, 2**32, n, dtype=np.uint32)
     bounds = [(0, 700), (1000, 1300)]       # gaps: [700,1000) and [2300,3000)
     out, _, _ = _run_fused(x, bounds, n, 256, [0, 8, 8, 8],
-                           np.full(2 * 256, 2), a_max=2, r=256)
+                           np.full(2 * 256, 2), a_max=2, r=256, batch=batch)
     want = x.copy()
     for b, s in bounds:
         seg = x[b:b + s]
@@ -178,9 +237,11 @@ def test_fused_pass_partitions_segments_and_copies_gaps(rng):
     assert np.array_equal(out[700:1000], x[700:1000])     # gap untouched
 
 
-def test_fused_pass_values_ride_and_next_histogram(rng):
+@pytest.mark.parametrize("batch", [None, 4])
+def test_fused_pass_values_ride_and_next_histogram(rng, batch):
     """Values ride the same scatter (§4.6) and the launch returns the NEXT
-    pass's digit histogram for the flagged sub-buckets (§4.3 fusion)."""
+    pass's digit histogram for the flagged sub-buckets (§4.3 fusion), under
+    flat and packed descriptor tables alike."""
     n = 2048
     x = rng.integers(0, 2**32, n, dtype=np.uint32)
     v = np.arange(n, dtype=np.int32)
@@ -190,7 +251,7 @@ def test_fused_pass_values_ride_and_next_histogram(rng):
     nsid[3] = 0
     out, (ov,), hist_next = _run_fused(
         x, bounds, n, 256, [8, 8, 0, 8], nsid, a_max=1, r=256,
-        vals=(jnp.asarray(v),))
+        vals=(jnp.asarray(v),), batch=batch)
     p = np.argsort((x >> 8) & 0xFF, kind="stable")
     assert np.array_equal(out, x[p])
     assert np.array_equal(ov, v[p])

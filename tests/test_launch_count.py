@@ -2,19 +2,23 @@
 
 The point of ``kernels.fused`` is that one counting pass is ONE Pallas
 launch (§4.3–§4.4: partition + scatter + next-pass histogram fused), so the
-whole hybrid sort traces to exactly three launch sites — the prologue
-histogram, the per-pass fused launch inside the while loop, and the bitonic
-local sort — independent of n, the data, and the executed pass count.
-``utils.hlo`` counts ``pallas_call`` sites in the jaxpr (interpret mode has
-no custom-call in the lowered HLO; on hardware ``pallas_custom_call_count``
-covers the lowered text).
+whole hybrid sort traces to a fixed set of launch sites — the prologue
+histogram, the per-pass fused launch inside the while loop, and one bitonic
+local-sort launch per size class (``core.hybrid.local_sort_classes``) —
+independent of the data and the executed pass count.  Batched grid steps
+(``plan.pack_region_blocks``) shrink the fused launch's *grid* from g_max
+to ⌈g_max/B⌉ but must not change the launch count: the while body stays
+exactly one ``pallas_call``.  ``utils.hlo`` counts ``pallas_call`` sites in
+the jaxpr and reads their grids (interpret mode has no custom-call in the
+lowered HLO; on hardware ``pallas_custom_call_count`` covers the text).
 """
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import SortConfig, hybrid_sort, lsd_sort, model
+from repro.core import SortConfig, hybrid_sort, lsd_sort, model, plan
+from repro.core.hybrid import local_sort_classes
 from repro.core.outofcore import _sort_chunk, merge_round
 from repro.core.segmented import counting_partition
 from repro.kernels import merge as kmerge
@@ -24,16 +28,21 @@ from repro.utils import hlo
 TCFG = SortConfig(d=8, kpb=64, local_threshold=48, merge_threshold=32)
 
 
+def _hybrid_launches(n, cfg):
+    """Prologue + fused pass + one bitonic launch per local-sort class."""
+    return 2 + len(local_sort_classes(n, cfg))
+
+
 def test_hybrid_fused_engine_one_launch_per_pass():
     """THE acceptance gate: the counting-pass loop body contains exactly one
-    pallas_call, and the whole trace exactly three (prologue + pass + local
-    sort), for any input size."""
+    pallas_call, and the whole trace exactly prologue + pass + the static
+    local-sort classes, for any input size."""
     for n in (257, 4096, 20000):
         jx = jax.make_jaxpr(
             lambda a: hybrid_sort(a, cfg=TCFG, engine="kernel"))(
                 jnp.zeros(n, jnp.uint32))
         assert hlo.while_body_pallas_launches(jx) == [1], n
-        assert hlo.pallas_launch_count(jx) == 3, n
+        assert hlo.pallas_launch_count(jx) == _hybrid_launches(n, TCFG), n
 
 
 def test_hybrid_fused_launches_with_values_and_stats():
@@ -42,16 +51,42 @@ def test_hybrid_fused_launches_with_values_and_stats():
     jx = jax.make_jaxpr(lambda a, b: hybrid_sort(
         a, b, cfg=TCFG, engine="kernel", return_stats=True))(x, v)
     assert hlo.while_body_pallas_launches(jx) == [1]
-    assert hlo.pallas_launch_count(jx) == 3
+    assert hlo.pallas_launch_count(jx) == _hybrid_launches(2048, TCFG)
+
+
+def test_hybrid_batched_grid_steps_shrink_the_grid():
+    """Packing B descriptor rows per super-step divides the fused launch's
+    grid by B (⌈g_max/B⌉) while the launch census is unchanged — the
+    batched-step contract of plan.pack_region_blocks."""
+    n = 4096
+    x = jnp.zeros(n, jnp.uint32)
+    for b in (1, 4, 16):
+        cfg = SortConfig(d=8, kpb=64, local_threshold=48, merge_threshold=32,
+                         step_batch=b)
+        a_max = model.max_active_buckets(n, cfg)
+        g_max = plan.max_region_blocks(n, cfg.kpb, a_max)
+        jx = jax.make_jaxpr(
+            lambda a: hybrid_sort(a, cfg=cfg, engine="kernel"))(x)
+        assert hlo.while_body_pallas_launches(jx) == [1], b
+        assert hlo.pallas_launch_count(jx) == _hybrid_launches(n, cfg), b
+        grids = hlo.pallas_grid_sizes(jx)
+        # trace order: prologue histogram, fused pass (while body), classes
+        assert grids[1] == (-(-g_max // b),), (b, grids)
+        assert len(grids) == _hybrid_launches(n, cfg), b
 
 
 def test_lsd_fused_engine_launch_count():
-    """LSD unrolls: ⌈k/d⌉ fused launches + the single prologue histogram."""
+    """LSD unrolls: ⌈k/d⌉ fused launches + the single prologue histogram,
+    each pass on the batched ⌈g_max/B⌉ grid."""
     x = jnp.zeros(2048, jnp.uint32)
     for d in (8, 5):
         jx = jax.make_jaxpr(
-            lambda a: lsd_sort(a, d=d, engine="kernel", kpb=512))(x)
+            lambda a: lsd_sort(a, d=d, engine="kernel", kpb=512,
+                               step_batch=4))(x)
         assert hlo.pallas_launch_count(jx) == model.num_digits(32, d) + 1, d
+        g_max = plan.max_region_blocks(2048, 512, 1)
+        assert all(g == (-(-g_max // 4),)
+                   for g in hlo.pallas_grid_sizes(jx)[1:]), d
 
 
 def test_counting_partition_fused_launch_count():
@@ -94,14 +129,15 @@ def test_ooc_merge_one_launch_per_round():
 
 def test_ooc_chunk_sort_keeps_one_launch_per_pass():
     """The PR 2 invariant under the new driver: an oocsort chunk sort on the
-    kernel engine still traces to one launch inside the pass loop, three
-    total (prologue + fused pass + local sort)."""
+    kernel engine still traces to one launch inside the pass loop, prologue
+    + fused pass + the local-sort classes in total."""
+    total = _hybrid_launches(256, TCFG)
     jx = jax.make_jaxpr(
         lambda a: _sort_chunk(a, (), TCFG, "kernel", True))(
             jnp.zeros(256, jnp.uint32))
     assert hlo.while_body_pallas_launches(jx) == [1]
-    assert hlo.pallas_launch_count(jx) == 3
-    assert hlo.launch_census(jx) == {"total": 3, "while_bodies": [1]}
+    assert hlo.pallas_launch_count(jx) == total
+    assert hlo.launch_census(jx) == {"total": total, "while_bodies": [1]}
 
 
 def test_spill_slab_sweep_single_launch_and_sort_free():

@@ -221,3 +221,54 @@ def test_next_active_table_sweep(seed):
     check_next_active_table(rng.integers(0, 96, (6, 16)).astype(np.int32), 32)
     check_next_active_table(np.zeros((3, 4), np.int32), 32)
     check_next_active_table(np.full((3, 4), 100, np.int32), 32)
+
+
+# --------------------------- packed super-steps ------------------------------
+
+def check_pack_region_blocks(seg_id, done, kpb, batch):
+    """Packing contract: flattening the (G', B) tables gives the flat rows
+    back in order, the tail pads with inert rows, and nothing about the
+    coverage story changes."""
+    n = seg_id.shape[0]
+    nseg = int(seg_id[-1]) + 1 if n else 0
+    a_max = max(1, nseg)
+    asegs = plan.active_segments(jnp.asarray(seg_id), jnp.asarray(done),
+                                 a_max)
+    g_max = plan.max_region_blocks(n, kpb, a_max)
+    flat = plan.make_region_blocks(asegs.base, asegs.size, n, kpb, g_max)
+    packed = plan.pack_region_blocks(flat, batch, seg_pad=a_max)
+    g_steps = -(-g_max // batch)
+    for name, f, p in zip(flat._fields, flat, packed):
+        p = np.asarray(p)
+        f = np.asarray(f)
+        assert p.shape == (g_steps, batch), name
+        # row order preserved exactly — the carry-chain compatibility rule
+        assert np.array_equal(p.reshape(-1)[:g_max], f), name
+    # the padded tail is inert: no live lanes, copy-through, carry-reset
+    tail = {name: np.asarray(p).reshape(-1)[g_max:]
+            for name, p in zip(packed._fields, packed)}
+    assert (tail["count"] == 0).all()
+    assert (tail["active"] == 0).all()
+    assert (tail["reset"] == 1).all()
+    assert (tail["seg"] == a_max).all()     # flat table's pad convention
+    # batch routing through make_region_blocks is the same packing
+    direct = plan.make_region_blocks(asegs.base, asegs.size, n, kpb, g_max,
+                                     batch=batch)
+    for a, b in zip(direct, packed):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("batch", [1, 3, 8])
+def test_pack_region_blocks_deterministic(batch):
+    rng = np.random.default_rng(7)
+    for n, kpb in [(1, 8), (100, 16), (1000, 64), (4096, 256)]:
+        seg_id, done = random_bucket_state(rng, n, max_segments=9)
+        check_pack_region_blocks(seg_id, done, kpb, batch)
+
+
+def test_pack_region_blocks_rejects_bad_batch():
+    blocks = plan.make_region_blocks(jnp.zeros((1,), jnp.int32),
+                                     jnp.full((1,), 64, jnp.int32), 64, 16,
+                                     plan.max_region_blocks(64, 16, 1))
+    with pytest.raises(ValueError, match="batch"):
+        plan.pack_region_blocks(blocks, 0)

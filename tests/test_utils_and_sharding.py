@@ -94,6 +94,71 @@ def test_param_spec_rules():
         == P(None, None, None)
 
 
+def test_param_spec_normalizes_single_axis_tuples():
+    """Every rule branch that shards over the data axes must emit the bare
+    axis name on a one-axis data mesh — ``P(None, 'data', None)``, never
+    ``P(None, ('data',), None)`` — and keep the real tuple on a pod+data
+    mesh.  Covers each fsdp/data branch of param_spec plus the batch/cache
+    spec helpers."""
+    from repro.launch.sharding import (param_spec, batch_specs, cache_specs,
+                                       _norm_axis)
+    from repro.configs import get_config
+    from jax.sharding import PartitionSpec as P
+
+    class DataMesh:
+        shape = {"data": 16, "model": 7}      # model=7: head dims don't divide
+        axis_names = ("data", "model")
+
+    class PodMesh:
+        shape = {"pod": 2, "data": 8, "model": 7}
+        axis_names = ("pod", "data", "model")
+
+    cfg = get_config("deepseek_67b")          # fsdp_params=True, 64/8 heads
+    mesh = DataMesh()
+
+    def flat(spec):
+        return [ax for ax in spec]
+
+    # wq/wk/wv fsdp fallback (heads % 7 != 0): in-dim shards over data
+    for w in ("wq", "wk", "wv"):
+        spec = param_spec(f"['layers']['attn']['{w}']", (95, 8192, 1024),
+                          cfg, mesh)
+        assert spec == P(None, "data", None), w
+        assert not any(isinstance(ax, tuple) for ax in flat(spec)), w
+    # wo fsdp fallback: out-dim shards over data
+    assert param_spec("['layers']['attn']['wo']", (95, 8192, 8192), cfg,
+                      mesh) == P(None, None, "data")
+    # dense FFN fsdp: the non-f dim shards over data (f dim % 7 != 0)
+    assert param_spec("['layers']['mlp']['w_gate']", (95, 8192, 22016), cfg,
+                      mesh) == P(None, "data", None)
+    assert param_spec("['layers']['mlp']['w_down']", (95, 22016, 8192), cfg,
+                      mesh) == P(None, None, "data")
+    # MoE expert stacks (E, d, f): fsdp shards d over data
+    moe = get_config("qwen3_moe_30b_a3b")
+    assert moe.fsdp_params
+    assert param_spec("['layers']['moe']['w_gate']", (48, 3, 2048, 768), moe,
+                      mesh) == P(None, None, "data", None)
+    # batch / cache specs emit the bare name too
+    from repro.configs.base import SHAPES
+    shape = next(iter(SHAPES.values()))
+    tok = batch_specs(cfg, mesh, shape)["tokens"]
+    assert not any(isinstance(ax, tuple) for ax in flat(tok))
+    cs = cache_specs(cfg, mesh, batch=16, max_len=128)
+    assert cs.kv_k is not None
+    assert not any(isinstance(ax, tuple) for ax in flat(cs.kv_k))
+
+    # a genuine multi-axis data mesh keeps the ('pod', 'data') tuple
+    pod = PodMesh()
+    spec = param_spec("['layers']['attn']['wk']", (95, 8192, 1024), cfg, pod)
+    assert spec == P(None, ("pod", "data"), None)
+    # the helper itself: scalars and multi-tuples pass through, () -> None
+    assert _norm_axis("data") == "data"
+    assert _norm_axis(("data",)) == "data"
+    assert _norm_axis(("pod", "data")) == ("pod", "data")
+    assert _norm_axis(()) is None
+    assert _norm_axis(None) is None
+
+
 def test_u64_keys_subprocess():
     """64-bit keys need x64 — isolated in a subprocess."""
     script = textwrap.dedent("""
@@ -125,13 +190,13 @@ def test_compressed_psum_subprocess():
         import numpy as np, jax, jax.numpy as jnp
         from jax.sharding import PartitionSpec as P
         from repro.optim.compression import compressed_psum
+        from repro.core.distributed import _shard_map   # jax-version shim
         mesh = jax.make_mesh((4,), ("pod",))
         x = jnp.asarray(np.random.default_rng(0).standard_normal((4, 256)).astype(np.float32))
-        exact = jax.shard_map(lambda v: jax.lax.psum(v, "pod"), mesh=mesh,
-                              in_specs=P("pod"), out_specs=P())(x)
-        comp = jax.shard_map(lambda v: compressed_psum(v, "pod"), mesh=mesh,
-                             in_specs=P("pod"), out_specs=P(),
-                             check_vma=False)(x)
+        exact = _shard_map(lambda v: jax.lax.psum(v, "pod"), mesh,
+                           (P("pod"),), P())(x)
+        comp = _shard_map(lambda v: compressed_psum(v, "pod"), mesh,
+                          (P("pod"),), P())(x)
         rel = float(jnp.max(jnp.abs(comp - exact)) / jnp.max(jnp.abs(exact)))
         assert rel < 0.05, rel
         print("COMP-OK", rel)
