@@ -21,10 +21,20 @@ rows share argsort-engine chunk sorts so the delta isolates the merge
 regime.  ``engines.annotate`` attaches ``ratios/...`` and ``notes`` for each
 contender, the same self-interpretation contract.
 
+``--faults`` adds the resilience-overhead sweep: ``faults/...`` rows time
+the spill pipeline **plain** (PR 5 call shape, no resilience), **resilient**
+(checksums at every host crossing + round-granular checkpointing + a
+zero-fault ``FaultPolicy`` — the fault-free overhead the ≤ 1.15x gate
+guards; breaching it lands a warning in ``notes``), and **faulty**
+(deterministic transient faults at the transfer sites, absorbed by bounded
+retries — what recovery actually costs).  ``ratios/faults/...`` entries are
+plain_us / resilient_us.
+
 Every row draws its keys from an explicit per-row seed
 (``data.distributions``), so rows replay bit-identically in isolation.
 
-``python -m benchmarks.run --json --ooc [--spill]`` writes BENCH_ooc.json.
+``python -m benchmarks.run --json --ooc [--spill] [--faults]`` writes
+BENCH_ooc.json.
 """
 from __future__ import annotations
 
@@ -107,15 +117,80 @@ def collect_spill(fast: bool = True, smoke: bool = False) -> dict:
     return annotate(out, contender="device")
 
 
-def main(fast: bool = True, smoke: bool = False, spill: bool = False) -> dict:
+FAULT_OVERHEAD_GATE = 1.15     # fault-free resilient path vs plain, max
+
+
+def collect_faults(fast: bool = True, smoke: bool = False) -> dict:
+    """Resilience overhead: plain vs checksums+checkpoints vs injected faults.
+
+    All three contenders run the identical spill plan, so the deltas isolate
+    what the resilience layer costs: ``resilient`` pays per-crossing
+    checksums + per-round checkpoints under a zero-fault policy (gated
+    ≤ ``FAULT_OVERHEAD_GATE``x vs ``plain``), ``faulty`` additionally pays
+    deterministic transient faults at the transfer sites, absorbed by
+    bounded retries.
+    """
+    import tempfile
+
+    from repro.core.faults import FaultPolicy, RetryPolicy
+
+    if smoke:
+        cases = [(1 << 10, 1 << 8, 1 << 7)]            # n, chunk, slab
+        dists = ("uniform",)
+    elif fast:
+        cases = [(1 << 12, 1 << 9, 1 << 7)]
+        dists = ("uniform", "zipf")
+    else:
+        cases = [(1 << 14, 1 << 11, 1 << 9), (1 << 16, 1 << 13, 1 << 11)]
+        dists = ("uniform", "zipf", "clustered")
+    out = {}
+    notes = []
+    for seed, (n, chunk, slab) in enumerate(cases):
+        for dist in dists:
+            x = DISTS[dist](seed, n)
+            stem = f"faults/sort/n={n}/chunks={n // chunk}/slab={slab}/{dist}"
+            run = lambda a, **kw: oocsort(a, chunk, engine="argsort",
+                                          kway=KWAY, tile=TILE,
+                                          device_slab_elems=slab, **kw)
+            out[f"{stem}/plain"] = timeit(run, x) * 1e6
+            with tempfile.TemporaryDirectory() as ckpt:
+                out[f"{stem}/resilient"] = timeit(
+                    lambda a: run(a, faults=FaultPolicy(seed=seed),
+                                  retry=RetryPolicy(),
+                                  checkpoint_dir=ckpt), x) * 1e6
+                faulty = FaultPolicy(seed=seed, rates={"slab_upload": 0.05,
+                                                       "chunk_upload": 0.05,
+                                                       "slab_download": 0.05})
+                out[f"{stem}/faulty"] = timeit(
+                    lambda a: run(a, faults=faulty,
+                                  retry=RetryPolicy(max_retries=8),
+                                  checkpoint_dir=ckpt), x) * 1e6
+            ratio = out[f"{stem}/plain"] / out[f"{stem}/resilient"]
+            out[f"ratios/{stem}/resilient"] = ratio
+            overhead = 1.0 / ratio if ratio else float("inf")
+            if overhead > FAULT_OVERHEAD_GATE:
+                notes.append(
+                    f"{stem}: fault-free resilient path {overhead:.2f}x "
+                    f"plain spill (checksum+checkpoint overhead gate is "
+                    f"{FAULT_OVERHEAD_GATE}x)")
+    out["notes"] = notes
+    return out
+
+
+def main(fast: bool = True, smoke: bool = False, spill: bool = False,
+         faults: bool = False) -> dict:
     rows = collect(fast, smoke=smoke)
-    if spill:
-        srows = collect_spill(fast, smoke=smoke)
-        notes = rows.pop("notes", []) + srows.pop("notes", [])
-        rows.update(srows)
-        rows["notes"] = notes
+    for enabled, extra in ((spill, collect_spill), (faults, collect_faults)):
+        if enabled:
+            srows = extra(fast, smoke=smoke)
+            notes = rows.pop("notes", []) + srows.pop("notes", [])
+            rows.update(srows)
+            rows["notes"] = notes
     for name, us in rows.items():
         if name == "notes":
+            continue
+        if name.startswith("ratios/faults/"):
+            row(f"ooc/{name}", 0.0, f"{us:.3f}x-plain-over-resilient")
             continue
         if name.startswith("ratios/"):
             row(f"ooc/{name}", 0.0, f"{us:.3f}x-argsort-over-ooc")

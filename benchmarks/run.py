@@ -16,10 +16,12 @@ streaming k-way merge vs one-shot argsort, ``benchmarks.ooc``); with
 ``--json PATH`` its rows land in ``BENCH_ooc.json`` next to PATH, carrying
 the same ``ratios/...`` + ``notes`` contract.  ``--spill`` extends the ooc
 sweep with the host-spill regime rows (streamed merge through bounded
-device slabs vs device-resident merge vs one-shot argsort).
+device slabs vs device-resident merge vs one-shot argsort).  ``--faults``
+adds the resilience-overhead rows (plain vs checksummed+checkpointed vs
+injected-fault spill runs, gated ≤ 1.15x on the fault-free path).
 
 ``python -m benchmarks.run [--full] [--smoke] [--only fig6,...]
-                           [--json [PATH]] [--ooc] [--spill]``
+                           [--json [PATH]] [--ooc] [--spill] [--faults]``
 """
 from __future__ import annotations
 
@@ -48,9 +50,14 @@ def main() -> None:
                     help="also run the out-of-core sweep (BENCH_ooc.json)")
     ap.add_argument("--spill", action="store_true",
                     help="with --ooc: add the host-spill streamed-merge rows")
+    ap.add_argument("--faults", action="store_true",
+                    help="with --ooc: add the resilience-overhead rows "
+                         "(checksums + checkpoints vs plain spill)")
     args = ap.parse_args()
     if args.spill and not args.ooc:
         ap.error("--spill extends the out-of-core sweep: pass --ooc too")
+    if args.faults and not args.ooc:
+        ap.error("--faults extends the out-of-core sweep: pass --ooc too")
     only = args.only.split(",") if args.only else None
     if args.smoke and only is None:
         only = ["engines"]               # smoke: the acceptance-gated sweep
@@ -91,7 +98,7 @@ def main() -> None:
     if args.ooc:
         from benchmarks import ooc
         rows = ooc.main(fast=not args.full, smoke=args.smoke,
-                        spill=args.spill)
+                        spill=args.spill, faults=args.faults)
         if args.json is not None:
             dump(rows, os.path.join(os.path.dirname(args.json) or ".",
                                     "BENCH_ooc.json"))

@@ -14,7 +14,11 @@
 #                          tests) + the interpret-mode benchmark smoke pass;
 #                          pairs with a separate `fast` job so CI never runs
 #                          the fast tier twice
-#   scripts/ci.sh [full] — both stages back to back (the one-stop local
+#   scripts/ci.sh faults — fault-matrix smoke only: one resilient oocsort
+#                          run per core.faults fault site with retries
+#                          enabled, asserting green + byte parity vs the
+#                          fault-free run (scripts/fault_matrix.py)
+#   scripts/ci.sh [full] — all stages back to back (the one-stop local
 #                          verify entry point)
 #
 # Everything runs on a plain CPU host: the Pallas kernels execute in
@@ -25,7 +29,8 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 
 STAGE="${1:-full}"
-if [[ "$STAGE" == "fast" || "$STAGE" == "slow" || "$STAGE" == "full" ]]; then
+if [[ "$STAGE" == "fast" || "$STAGE" == "slow" || "$STAGE" == "faults" \
+      || "$STAGE" == "full" ]]; then
   if [[ $# -gt 0 ]]; then shift; fi
 else
   STAGE="full"
@@ -52,6 +57,12 @@ run_stage() {
   fi
 }
 
+if [[ "$STAGE" == "faults" ]]; then
+  echo "=== fault-matrix smoke (one resilient run per fault site) ==="
+  python scripts/fault_matrix.py
+  exit 0
+fi
+
 if [[ "$STAGE" != "slow" ]]; then
   echo "=== tier-1 tests (fast stage: -m 'not slow') ==="
   run_stage -m "not slow" "$@"
@@ -61,10 +72,17 @@ if [[ "$STAGE" == "fast" ]]; then
   exit 0
 fi
 
+# faults runs as its own CI job; in the local one-stop `full` entry point it
+# slots between the tiers
+if [[ "$STAGE" == "full" ]]; then
+  echo "=== fault-matrix smoke (one resilient run per fault site) ==="
+  python scripts/fault_matrix.py
+fi
+
 # smoke benches run BEFORE the slow suite so the BENCH artifacts exist even
 # when a slow test fails (the upload step runs if: always())
-echo "=== benchmark smoke (interpret mode, engine + out-of-core + spill) ==="
-python -m benchmarks.run --json BENCH_smoke.json --smoke --ooc --spill
+echo "=== benchmark smoke (interpret mode, engine + ooc + spill + faults) ==="
+python -m benchmarks.run --json BENCH_smoke.json --smoke --ooc --spill --faults
 
 echo "=== tier-1 tests (slow stage: -m slow) ==="
 run_stage -m "slow" "$@"

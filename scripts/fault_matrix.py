@@ -1,0 +1,101 @@
+"""Fault-matrix smoke: one resilient oocsort run per fault site, green + parity.
+
+CI's `faults` stage (scripts/ci.sh faults) runs this after the fast tier:
+for every site in ``core.faults.FAULT_SITES`` it injects two consecutive
+transient faults at that site's first op (``fail_at={site: [0, 1]}``) under
+the default bounded-retry policy and asserts the run stays green — output
+byte-identical to the fault-free run, the fault actually fired, no
+degradation was needed, the device high-water stayed under the budget, and
+the link-byte identity ``h2d + d2h == chunk_link + spill_link + retry_link``
+held exactly.  The ``host_corruption`` pseudo-site runs with a checkpoint
+directory so the detected corruption recovers from the round checkpoint
+instead of raising.
+
+Every run shares one spill plan (same shapes), so the jit cache is warm
+after the baseline and the whole matrix stays a smoke test, not a bench.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import tempfile
+
+import numpy as np
+
+from repro.core.faults import FAULT_SITES, FaultPolicy, RetryPolicy
+from repro.core.outofcore import oocsort
+
+
+def run_matrix(n: int = 3000, chunk: int = 700, tile: int = 16,
+               budget: int = 4096, seed: int = 0) -> int:
+    rng = np.random.default_rng(seed)
+    keys = rng.integers(0, 2 ** 32, n, dtype=np.uint32)
+    vals = np.arange(n, dtype=np.uint32)
+    want_k, want_v, base = oocsort(keys, chunk, values=vals, tile=tile,
+                                   spill_budget_bytes=budget,
+                                   return_stats=True)
+    print(f"baseline: n={n} chunks={base.num_chunks} "
+          f"rounds={base.rounds_spilled} hw={base.device_high_water_bytes}")
+    failed = 0
+    for site in FAULT_SITES:
+        policy = FaultPolicy(seed=seed, fail_at={site: [0, 1]})
+        retry = RetryPolicy(max_retries=3)
+        kwargs = {}
+        ctx = tempfile.TemporaryDirectory()
+        with ctx as ckpt_dir:
+            if site == "host_corruption":
+                # detected corruption recovers from the round checkpoint
+                kwargs["checkpoint_dir"] = ckpt_dir
+            got_k, got_v, st = oocsort(
+                keys, chunk, values=vals, tile=tile,
+                spill_budget_bytes=budget, faults=policy, retry=retry,
+                return_stats=True, **kwargs)
+        problems = []
+        if not np.array_equal(got_k, want_k):
+            problems.append("keys differ from fault-free run")
+        if not np.array_equal(got_v, want_v):
+            problems.append("values differ from fault-free run")
+        if site == "host_corruption":
+            if st.checksum_failures < 1:
+                problems.append("corruption was injected but never detected")
+        elif st.faults_injected < 2:
+            problems.append(f"expected 2 injected faults, saw "
+                            f"{st.faults_injected}")
+        if st.degradations:
+            problems.append(f"{st.degradations} degradations (retries alone "
+                            f"should have absorbed 2 transients)")
+        if st.device_high_water_bytes > budget:
+            problems.append(f"high water {st.device_high_water_bytes} > "
+                            f"budget {budget}")
+        if st.h2d_bytes + st.d2h_bytes != (st.chunk_link_bytes +
+                                           st.spill_link_bytes +
+                                           st.retry_link_bytes):
+            problems.append("link-byte identity violated")
+        status = "ok" if not problems else "FAIL"
+        print(f"{site:16s} {status}  faults={st.faults_injected} "
+              f"retries={st.retries} checksum_failures={st.checksum_failures} "
+              f"retry_link_bytes={st.retry_link_bytes}")
+        for p in problems:
+            print(f"                 - {p}")
+        failed += bool(problems)
+    if failed:
+        print(f"FAULT MATRIX: {failed}/{len(FAULT_SITES)} sites FAILED")
+        return 1
+    print(f"FAULT MATRIX: all {len(FAULT_SITES)} sites green")
+    return 0
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--n", type=int, default=3000)
+    ap.add_argument("--chunk", type=int, default=700)
+    ap.add_argument("--tile", type=int, default=16)
+    ap.add_argument("--budget", type=int, default=4096)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+    return run_matrix(n=args.n, chunk=args.chunk, tile=args.tile,
+                      budget=args.budget, seed=args.seed)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

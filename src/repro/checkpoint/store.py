@@ -118,6 +118,36 @@ def latest_step(directory: str) -> Optional[int]:
     return steps[-1] if steps else None
 
 
+def restore_blind(directory: str, step: int) -> dict:
+    """Restore a checkpoint without a ``like`` tree.
+
+    Rebuilds every chunk as a host numpy array straight from the manifest's
+    per-chunk dtype/shape meta (hash-verified, no device trip) and returns a
+    ``{keystr: array}`` mapping keyed by the flatten-with-path key strings
+    recorded in ``paths.msgpack``.  This is what a *resuming* process needs:
+    it has no live pytree to mirror — the checkpoint is the only source of
+    structure.  Used by ``core.outofcore``'s round-granular resume, where
+    the tree is a flat dict of merge runs plus a JSON manifest leaf.
+    """
+    path = os.path.join(directory, f"step_{step:010d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    with open(os.path.join(path, "paths.msgpack"), "rb") as f:
+        paths = msgpack.unpackb(f.read())
+    assert len(paths) == manifest["num_chunks"], "paths/manifest mismatch"
+    dctx = zstd.ZstdDecompressor()
+    out = {}
+    for i, (keystr, meta) in enumerate(zip(paths, manifest["meta"])):
+        with open(os.path.join(path, f"chunk_{i:06d}.zst"), "rb") as f:
+            comp = f.read()
+        if hashlib.sha256(comp).hexdigest() != manifest["hashes"][i]:
+            raise IOError(f"checkpoint chunk {i} corrupt")
+        out[keystr] = np.frombuffer(
+            dctx.decompress(comp),
+            dtype=np.dtype(meta["dtype"])).reshape(meta["shape"])
+    return out
+
+
 def restore_checkpoint(directory: str, step: int, like: Any) -> Any:
     """Restore into the structure of ``like`` (shape/dtype verified)."""
     path = os.path.join(directory, f"step_{step:010d}")

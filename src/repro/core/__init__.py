@@ -10,10 +10,19 @@ Public API:
   oocsort            — §5: out-of-core pipelined sort (chunked device runs
                        under double-buffered staging + streaming k-way
                        merge; spill_budget_bytes bounds device memory by
-                       streaming host-resident runs through device slabs)
+                       streaming host-resident runs through device slabs;
+                       faults=/retry=/checkpoint_dir=/resume_from= give it
+                       a failure story — injected faults, bounded retries,
+                       a degradation ladder and round-granular resume)
+  FaultPolicy        — deterministic seed-driven fault injection for oocsort
+  RetryPolicy        — bounded retries with capped backoff, ledger-tracked
 """
 from repro.core.bijection import (to_ordered_bits, from_ordered_bits,
-                                  from_ordered_bits_np, key_bits)
+                                  from_ordered_bits_np, to_ordered_bits_np,
+                                  key_bits)
+from repro.core.faults import (FAULT_SITES, ChecksumError, FatalFault,
+                               FaultPolicy, RetriesExhausted, RetryPolicy,
+                               host_checksum)
 from repro.core.hybrid import hybrid_sort, SortStats
 from repro.core.lsd import lsd_sort
 from repro.core.model import (SortConfig, default_config, memory_budget,
@@ -25,7 +34,9 @@ __all__ = [
     "hybrid_sort", "lsd_sort", "SortStats", "SortConfig", "default_config",
     "memory_budget", "pass_counts", "expected_speedup",
     "to_ordered_bits", "from_ordered_bits", "from_ordered_bits_np",
-    "key_bits",
+    "to_ordered_bits_np", "key_bits",
     "oocsort", "OocStats",
+    "FAULT_SITES", "FaultPolicy", "RetryPolicy", "FatalFault",
+    "ChecksumError", "RetriesExhausted", "host_checksum",
     "ENGINES", "resolve_engine",
 ]

@@ -9,6 +9,21 @@ first counting-sort pass and mapped back during the local sort / last pass
   * signed ints:   flip the sign bit
   * floats:        if sign bit set -> flip ALL bits, else -> flip sign bit only
 
+Float special values (pinned by the bijection test wall — IEEE-754
+totalOrder semantics, which every float key inherits through ``hybrid_sort``
+and ``oocsort``):
+
+  * the map is a **bijection on bit patterns**: every value — NaNs with any
+    payload included — round-trips bit-exactly through
+    ``from_ordered_bits(to_ordered_bits(x))``;
+  * ``-0.0 < +0.0``: the two zeros encode to adjacent but distinct bit
+    patterns (``-0.0`` just below ``+0.0``), so both survive a sort
+    unchanged and all negative values sort strictly below both;
+  * NaNs sort to **deterministic extremes by sign bit**: negative-signed
+    NaNs below ``-inf``, positive-signed NaNs above ``+inf``, ordered among
+    themselves by payload — a NaN key can never land between finite keys or
+    be silently canonicalised.
+
 All functions are jit-safe and shape-preserving.
 """
 from __future__ import annotations
@@ -78,6 +93,29 @@ def from_ordered_bits(ubits: jnp.ndarray, dtype) -> jnp.ndarray:
     was_neg = (ubits & sign) == 0  # encoded negatives have sign bit cleared
     bits = jnp.where(was_neg, ~ubits, ubits ^ sign)
     return bits.view(dt)
+
+
+def to_ordered_bits_np(keys: np.ndarray) -> np.ndarray:
+    """NumPy mirror of :func:`to_ordered_bits` for host-resident keys.
+
+    Bit-for-bit the same map as the jit version (the bijection parity test
+    pins this), so host-side tooling — checksum verification of spilled
+    runs, reference orderings in tests — can encode keys without a device
+    round-trip.
+    """
+    dt = np.dtype(keys.dtype)
+    if jnp.dtype(dt) not in _CARRIER:
+        raise TypeError(f"unsupported key dtype {dt}")
+    udt = np.dtype(carrier_dtype(dt))
+    keys = np.asarray(keys)
+    if np.issubdtype(dt, np.unsignedinteger):
+        return keys.astype(udt, copy=False)
+    bits = keys.view(udt)
+    sign = udt.type(1 << (np.iinfo(udt).bits - 1))
+    if np.issubdtype(dt, np.signedinteger):
+        return bits ^ sign
+    neg = (bits & sign) != 0
+    return np.where(neg, ~bits, bits ^ sign)
 
 
 def from_ordered_bits_np(ubits: np.ndarray, dtype) -> np.ndarray:

@@ -67,7 +67,10 @@ def length_bucketed_batches(lengths: np.ndarray, batch_tokens: int,
                             engine: Optional[str] = None,
                             ooc_chunk_elems: Optional[int] = None,
                             ooc_spill_budget_bytes: Optional[int] = None,
-                            ooc_device_slab_elems: Optional[int] = None):
+                            ooc_device_slab_elems: Optional[int] = None,
+                            ooc_fault_policy=None,
+                            ooc_retry_policy=None,
+                            ooc_checkpoint_dir: Optional[str] = None):
     """Order documents by length via two LSD counting passes, then pack.
 
     The ordering is an explicit LSD radix sort on the shared engine-selected
@@ -79,7 +82,13 @@ def length_bucketed_batches(lengths: np.ndarray, batch_tokens: int,
     streaming k-way merge rounds).  ``ooc_spill_budget_bytes`` /
     ``ooc_device_slab_elems`` pass through to ``oocsort``'s host-spill
     streaming merge, bounding device bytes for corpora whose sorted runs
-    exceed device memory.  Returns (order, bucket_bounds):
+    exceed device memory.  ``ooc_fault_policy`` / ``ooc_retry_policy`` /
+    ``ooc_checkpoint_dir`` pass through to ``oocsort``'s resilience layer
+    (``core.faults``): the bucketing order inherits bounded retries, the
+    degradation ladder and round-granular checkpointing, so a multi-round
+    corpus sort that dies mid-merge resumes instead of restarting — the
+    same restart-exactness posture as the token stream itself.
+    Returns (order, bucket_bounds):
     ``order`` is the sorted document order (longest-with-longest minimises
     padding waste), bounds delimit batches of at most ``batch_tokens``
     padded tokens.
@@ -89,13 +98,21 @@ def length_bucketed_batches(lengths: np.ndarray, batch_tokens: int,
                                     ooc_device_slab_elems is not None):
         raise ValueError("ooc spill options require ooc_chunk_elems (the "
                          "spill regime is part of the out-of-core route)")
+    if ooc_chunk_elems is None and (ooc_fault_policy is not None or
+                                    ooc_retry_policy is not None or
+                                    ooc_checkpoint_dir is not None):
+        raise ValueError("ooc fault/retry/checkpoint options require "
+                         "ooc_chunk_elems (resilience wraps the "
+                         "out-of-core route)")
     if ooc_chunk_elems is not None:
         from repro.core.outofcore import oocsort
         sorted_len, order = oocsort(
             lengths, ooc_chunk_elems, engine=engine,
             values=np.arange(lengths.shape[0], dtype=np.int32),
             spill_budget_bytes=ooc_spill_budget_bytes,
-            device_slab_elems=ooc_device_slab_elems)
+            device_slab_elems=ooc_device_slab_elems,
+            faults=ooc_fault_policy, retry=ooc_retry_policy,
+            checkpoint_dir=ooc_checkpoint_dir)
     else:
         # host-side: only as many passes as the longest document needs
         max_len = int(lengths.max()) if lengths.size else 0

@@ -5,6 +5,15 @@ remaining-length class (repro.core.segmented) — short-remaining requests are
 co-batched so a slot never idles behind a long straggler longer than one
 class width: the paper's partitioning machinery doing decode-batch straggler
 mitigation.
+
+Queues past device memory (the north-star "heavy traffic" regime) route the
+admission sort through the §5 out-of-core pipeline instead: an
+:class:`AdmissionConfig` switches ``schedule`` to ``core.outofcore.oocsort``
+over the remaining-length classes, with the device footprint bounded by
+``spill_budget_bytes`` and — because an admission sort that crashes drops
+every queued request — the ``core.faults`` resilience layer (fault policy,
+bounded retries, degradation ladder, round-granular checkpoints) threaded
+straight through.
 """
 from __future__ import annotations
 
@@ -30,22 +39,56 @@ class Request:
 LENGTH_CLASS = 64                         # remaining-length bucket width
 
 
+@dataclasses.dataclass
+class AdmissionConfig:
+    """Out-of-core admission sorting for queues past device memory.
+
+    When set on :class:`ServeEngine`, ``schedule`` orders the queue through
+    ``core.outofcore.oocsort`` instead of a single device counting pass:
+    the remaining-length classes stream through chunk sorts + k-way merge
+    rounds, device bytes bounded by ``spill_budget_bytes`` /
+    ``device_slab_elems``, and the ``core.faults`` resilience layer —
+    ``faults`` (a ``FaultPolicy``), ``retry`` (a ``RetryPolicy``) and
+    ``checkpoint_dir`` — rides along so an admission sort over a huge queue
+    retries, degrades and resumes instead of dropping the queue.
+    """
+    chunk_elems: int
+    spill_budget_bytes: Optional[int] = None
+    device_slab_elems: Optional[int] = None
+    faults: Optional[object] = None       # core.faults.FaultPolicy
+    retry: Optional[object] = None        # core.faults.RetryPolicy
+    checkpoint_dir: Optional[str] = None
+
+
 class ServeEngine:
-    def __init__(self, cfg, params, batch_size: int, max_len: int):
+    def __init__(self, cfg, params, batch_size: int, max_len: int,
+                 admission: Optional[AdmissionConfig] = None):
         self.cfg, self.params = cfg, params
         self.batch = batch_size
         self.max_len = max_len
+        self.admission = admission
         self._decode = jax.jit(lambda p, t, c: decode_step(p, cfg, t, c))
 
     def schedule(self, queue: List[Request]) -> List[List[Request]]:
         """Sort-based admission: group by remaining-length class (one counting
-        pass), then fill fixed-size batches class-major."""
+        pass — or the resilient out-of-core route under an
+        :class:`AdmissionConfig`), then fill fixed-size batches class-major."""
         if not queue:
             return []
-        classes = jnp.asarray([min(r.max_new_tokens // LENGTH_CLASS, 255)
-                               for r in queue], jnp.int32)
-        part = counting_partition(classes, 256)
-        order = np.asarray(part.perm)
+        cls = [min(r.max_new_tokens // LENGTH_CLASS, 255) for r in queue]
+        if self.admission is not None:
+            from repro.core.outofcore import oocsort
+            adm = self.admission
+            _, order = oocsort(
+                np.asarray(cls, np.uint32), adm.chunk_elems,
+                values=np.arange(len(queue), dtype=np.int32),
+                spill_budget_bytes=adm.spill_budget_bytes,
+                device_slab_elems=adm.device_slab_elems,
+                faults=adm.faults, retry=adm.retry,
+                checkpoint_dir=adm.checkpoint_dir)
+        else:
+            part = counting_partition(jnp.asarray(cls, jnp.int32), 256)
+            order = np.asarray(part.perm)
         batches = []
         for i in range(0, len(queue), self.batch):
             batches.append([queue[j] for j in order[i:i + self.batch]])

@@ -1,0 +1,97 @@
+"""Bijection hardening wall: float special values through the §4.6 key map.
+
+Pins the IEEE-754 totalOrder semantics the whole pipeline inherits —
+``hybrid_sort`` encodes keys to ordered bits before any pass and ``oocsort``
+merges runs bitwise, so NaNs (any payload, either sign), ±0.0, ±inf and
+denormals must encode monotonically and round-trip bit-exactly or float
+keys silently corrupt.  Also pins the numpy mirrors
+(``to_ordered_bits_np``/``from_ordered_bits_np``) bit-for-bit against the
+jit versions: the host-spill path and checksum layer trust them.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.bijection import (carrier_dtype, from_ordered_bits,
+                                  from_ordered_bits_np, to_ordered_bits,
+                                  to_ordered_bits_np)
+from repro.core.outofcore import oocsort
+
+# bit patterns in strict totalOrder: -NaN (max payload) < -NaN (quiet) <
+# -inf < -max < -1 < -denormal < -0.0 < +0.0 < +denormal < 1 < +max <
+# +inf < +NaN (quiet) < +NaN (max payload)
+_TOTAL_ORDER_BITS = {
+    np.float32: np.array([
+        0xFFFFFFFF, 0xFFC00000, 0xFF800000, 0xFF7FFFFF, 0xBF800000,
+        0x80000001, 0x80000000, 0x00000000, 0x00000001, 0x3F800000,
+        0x7F7FFFFF, 0x7F800000, 0x7FC00000, 0x7FFFFFFF], dtype=np.uint32),
+    np.float64: np.array([
+        0xFFFFFFFFFFFFFFFF, 0xFFF8000000000000, 0xFFF0000000000000,
+        0xFFEFFFFFFFFFFFFF, 0xBFF0000000000000, 0x8000000000000001,
+        0x8000000000000000, 0x0000000000000000, 0x0000000000000001,
+        0x3FF0000000000000, 0x7FEFFFFFFFFFFFFF, 0x7FF0000000000000,
+        0x7FF8000000000000, 0x7FFFFFFFFFFFFFFF], dtype=np.uint64),
+}
+
+
+def _specials(fdtype):
+    return _TOTAL_ORDER_BITS[fdtype].view(fdtype)
+
+
+@pytest.mark.parametrize("fdtype", [np.float32, np.float64])
+def test_float_total_order_monotone_and_bit_exact(fdtype):
+    import jax
+    if fdtype is np.float64 and not jax.config.jax_enable_x64:
+        pytest.skip("float64 keys require jax_enable_x64")
+    x = _specials(fdtype)
+    enc = np.asarray(to_ordered_bits(jnp.asarray(x)))
+    # strictly increasing: NaNs at deterministic extremes by sign, payload-
+    # ordered; -0.0 strictly below +0.0; denormals between zero and ±1
+    assert (np.diff(enc.astype(np.uint64)) > 0).all(), enc
+    back = np.asarray(from_ordered_bits(jnp.asarray(enc), fdtype))
+    assert back.tobytes() == x.tobytes()        # bit-exact incl. NaN payloads
+
+
+def test_negative_zero_round_trip_and_order():
+    z = np.array([-0.0, 0.0], np.float32)
+    enc = np.asarray(to_ordered_bits(jnp.asarray(z)))
+    assert enc[0] < enc[1]                      # -0.0 sorts strictly below
+    back = np.asarray(from_ordered_bits(jnp.asarray(enc), np.float32))
+    assert np.signbit(back[0]) and not np.signbit(back[1])
+    assert back.tobytes() == z.tobytes()
+
+
+@pytest.mark.parametrize("dtype", [np.uint16, np.int32, np.float32])
+def test_numpy_mirror_matches_jit_bijection(rng, dtype):
+    # random bit patterns cover NaNs/infs/denormals for the float case
+    raw = rng.integers(0, 1 << 32, 512, dtype=np.uint64)
+    bits = raw.astype(np.dtype(dtype).str.replace("f", "u").replace("i", "u"))
+    x = bits.view(dtype)
+    np_enc = to_ordered_bits_np(x)
+    jit_enc = np.asarray(to_ordered_bits(jnp.asarray(x)))
+    assert np_enc.tobytes() == jit_enc.tobytes()
+    assert np_enc.dtype == np.dtype(carrier_dtype(dtype))
+    np_back = from_ordered_bits_np(np_enc, dtype)
+    jit_back = np.asarray(from_ordered_bits(jnp.asarray(jit_enc), dtype))
+    assert np_back.tobytes() == x.tobytes()     # bijection, bit-exact
+    assert jit_back.tobytes() == x.tobytes()
+
+
+def test_numpy_mirror_rejects_unsupported():
+    with pytest.raises(TypeError):
+        to_ordered_bits_np(np.zeros(2, np.complex64))
+
+
+@pytest.mark.parametrize("spill", [False, True])
+def test_nan_keys_through_oocsort(rng, spill):
+    """NaN/±0 float keys survive the full §5 pipeline in totalOrder."""
+    n = 1024
+    x = rng.normal(size=n).astype(np.float32)
+    # salt in both NaN signs (distinct payloads), ±inf and both zeros
+    salt = _specials(np.float32)
+    x[rng.choice(n, salt.shape[0], replace=False)] = salt
+    kwargs = dict(spill_budget_bytes=4096) if spill else {}
+    out = oocsort(x, 300, tile=16, engine="argsort", **kwargs)
+    expected = from_ordered_bits_np(np.sort(to_ordered_bits_np(x)),
+                                    np.float32)
+    assert out.tobytes() == expected.tobytes()  # bit-exact incl. NaN payload

@@ -1,0 +1,344 @@
+"""Fault-injection wall: retries, degradation ladder, checkpoint/resume.
+
+The resilience contract of ``core.faults`` + ``core.outofcore``:
+
+  * determinism — the same seed + policy replayed over the same driver
+    schedule injects the same faults: two runs produce identical
+    ``OocStats`` ledgers and byte-identical output;
+  * recovery is invisible in the bytes — transient faults (any site),
+    ladder degradations (slab/kway rungs) and detected host corruption all
+    end in output byte-identical to the fault-free run, with the clean
+    link-byte formulas untouched (failed attempts ledger separately as
+    ``retry_link_bytes``);
+  * kill-and-resume — a run killed by an injected fatal fault after merge
+    round r resumes from its round checkpoint (``resume_from=``) to a
+    byte-identical result, with ``rounds_spilled == R - r``, the device
+    high-water still under the budget, and the per-round / per-slab-sweep
+    launch schedule conserved (asserted through the fault-schedule op
+    counters, which count exactly one draw per guarded transfer/launch).
+"""
+import tempfile
+
+import numpy as np
+import pytest
+try:  # hypothesis is an optional test dependency (see pyproject.toml)
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:
+    def given(*_a, **_k):
+        return pytest.mark.skip(reason="hypothesis not installed")
+
+    def settings(*_a, **_k):
+        return lambda f: f
+
+    class st:  # noqa: N801 - stand-in for hypothesis.strategies
+        @staticmethod
+        def integers(*_a, **_k):
+            return None
+
+        @staticmethod
+        def floats(*_a, **_k):
+            return None
+
+from repro.checkpoint import store
+from repro.core.faults import (FAULT_SITES, ChecksumError, FatalFault,
+                               FaultPolicy, RetriesExhausted, RetryPolicy,
+                               host_checksum)
+from repro.core.outofcore import oocsort
+
+TILE = 16
+BUDGET = 4096
+N = 3000
+CHUNK = 700
+
+
+def _data(rng, dtype=np.uint32, n=N):
+    if np.dtype(dtype).kind == "f":
+        keys = rng.normal(size=n).astype(dtype) * 100.0
+    else:
+        keys = rng.integers(0, 2 ** 32, n).astype(dtype)
+    return keys, np.arange(n, dtype=np.uint32)
+
+
+def _spill(keys, vals, **kw):
+    return oocsort(keys, CHUNK, values=vals, engine="argsort", tile=TILE,
+                   spill_budget_bytes=BUDGET, return_stats=True, **kw)
+
+
+# --------------------------- unit layer --------------------------------------
+
+def test_retry_policy_validation_and_backoff():
+    with pytest.raises(ValueError):
+        RetryPolicy(max_retries=-1)
+    rp = RetryPolicy(max_retries=3, backoff_base_s=0.01, backoff_cap_s=0.02)
+    assert rp.backoff_s(0) == 0.01
+    assert rp.backoff_s(5) == 0.02                       # capped
+    assert RetryPolicy().backoff_s(9) == 0.0             # base 0: instant
+
+
+def test_fault_policy_validation():
+    with pytest.raises(ValueError, match="unknown fault site"):
+        FaultPolicy(rates={"warp_divergence": 0.5})
+    with pytest.raises(ValueError, match="unknown fault site"):
+        FaultPolicy(fail_at={"bogus": [0]})
+    with pytest.raises(ValueError, match="must be in"):
+        FaultPolicy(rates={"chunk_upload": 1.5})
+    with pytest.raises(ValueError, match="unknown fault site"):
+        FaultPolicy().draw("bogus")
+
+
+def test_fault_policy_draws_are_deterministic_and_counted():
+    a = FaultPolicy(seed=9, rates={"slab_upload": 0.5})
+    b = FaultPolicy(seed=9, rates={"slab_upload": 0.5})
+    seq_a = [a.draw("slab_upload") for _ in range(64)]
+    seq_b = [b.draw("slab_upload") for _ in range(64)]
+    assert seq_a == seq_b                                # pure in (seed, i)
+    assert any(k == "transient" for k in seq_a)
+    assert any(k is None for k in seq_a)
+    assert a.state() == {"slab_upload": 64}
+    c = FaultPolicy(seed=9, rates={"slab_upload": 0.5})
+    c.load_state({"slab_upload": 32})                    # resume mid-schedule
+    assert [c.draw("slab_upload") for _ in range(32)] == seq_a[32:]
+
+
+def test_host_checksum_detects_flips_and_dtype():
+    x = np.arange(64, dtype=np.uint32)
+    h = host_checksum(x)
+    y = x.copy()
+    y.view(np.uint8)[17] ^= 0xFF
+    assert host_checksum(y) != h                         # single byte flip
+    assert host_checksum(x.view(np.int32)) != h          # dtype mixed in
+    assert host_checksum(x.reshape(8, 8)) != h           # shape mixed in
+
+
+# --------------------------- deterministic replay ----------------------------
+
+def test_deterministic_fault_replay_identical_ledgers_and_bytes(rng):
+    keys, vals = _data(rng)
+    want_k, want_v, clean = _spill(keys, vals)
+    mk = lambda: FaultPolicy(seed=11, rates={"chunk_upload": 0.08,
+                                             "slab_upload": 0.08,
+                                             "slab_download": 0.08,
+                                             "merge_launch": 0.05})
+    runs = [_spill(keys, vals, faults=mk(),
+                   retry=RetryPolicy(max_retries=6)) for _ in range(2)]
+    (k1, v1, s1), (k2, v2, s2) = runs
+    assert s1 == s2                                      # identical ledgers
+    assert k1.tobytes() == k2.tobytes() == want_k.tobytes()
+    assert v1.tobytes() == v2.tobytes() == want_v.tobytes()
+    assert s1.faults_injected > 0 and s1.retries > 0
+    # retries never bend the clean per-phase formulas
+    assert s1.chunk_link_bytes == clean.chunk_link_bytes
+    assert s1.spill_link_bytes == clean.spill_link_bytes
+    assert s1.h2d_bytes + s1.d2h_bytes == (s1.chunk_link_bytes +
+                                           s1.spill_link_bytes +
+                                           s1.retry_link_bytes)
+
+
+@pytest.mark.parametrize("site", [s for s in FAULT_SITES
+                                  if s != "host_corruption"])
+def test_transient_fault_at_each_site_is_absorbed(rng, site):
+    keys, vals = _data(rng)
+    want_k, want_v, _ = _spill(keys, vals)
+    got_k, got_v, st_ = _spill(keys, vals,
+                               faults=FaultPolicy(seed=1,
+                                                  fail_at={site: [0, 1]}),
+                               retry=RetryPolicy(max_retries=3))
+    assert got_k.tobytes() == want_k.tobytes()
+    assert got_v.tobytes() == want_v.tobytes()
+    assert st_.faults_injected == 2 and st_.retries == 2
+    assert st_.degradations == 0                         # retries sufficed
+    assert st_.device_high_water_bytes <= BUDGET
+
+
+def test_fatal_fault_raises_with_ledger(rng):
+    keys, vals = _data(rng)
+    with pytest.raises(FatalFault) as ei:
+        _spill(keys, vals, faults=FaultPolicy(seed=2,
+                                              fatal_at={"sort_launch": [1]}))
+    assert ei.value.site == "sort_launch"
+    assert ei.value.ledger.faults_injected == 1
+
+
+# --------------------------- degradation ladder ------------------------------
+
+def test_degradation_ladder_slab_kway_rechunk(rng):
+    """Three exhaustions walk slab -> kway -> re-chunk; bytes unchanged."""
+    keys, vals = _data(rng)
+    want_k, want_v, clean = _spill(keys, vals)
+    got_k, got_v, st_ = _spill(
+        keys, vals,
+        faults=FaultPolicy(seed=3, fail_at={"slab_upload": list(range(6))}),
+        retry=RetryPolicy(max_retries=1))
+    assert st_.degradations == 3
+    assert got_k.tobytes() == want_k.tobytes()
+    assert got_v.tobytes() == want_v.tobytes()           # unique values: exact
+    assert st_.chunk_elems < clean.chunk_elems           # re-chunk rung taken
+    assert st_.device_high_water_bytes <= BUDGET         # rungs re-validated
+
+
+def test_ladder_exhaustion_finally_raises(rng):
+    keys = rng.integers(0, 2 ** 32, 64, dtype=np.uint32)
+    with pytest.raises(RetriesExhausted):
+        oocsort(keys, 16, engine="argsort", tile=TILE,
+                spill_budget_bytes=BUDGET,
+                faults=FaultPolicy(seed=4,
+                                   fail_at={"slab_upload": list(range(500))}),
+                retry=RetryPolicy(max_retries=0))
+
+
+def test_nonspill_kway_degradation_and_parity(rng):
+    keys, vals = _data(rng, n=1200)
+    want_k, want_v = oocsort(keys, 300, values=vals, engine="argsort",
+                             tile=32)
+    got_k, got_v, st_ = oocsort(
+        keys, 300, values=vals, engine="argsort", tile=32,
+        faults=FaultPolicy(seed=5, fail_at={"merge_launch": [0, 1]}),
+        retry=RetryPolicy(max_retries=0), return_stats=True)
+    assert st_.degradations >= 1                         # kway rung (device)
+    assert got_k.tobytes() == want_k.tobytes()
+    assert got_v.tobytes() == want_v.tobytes()
+
+
+# --------------------------- corruption + checkpoint -------------------------
+
+def test_corruption_without_checkpoint_raises(rng):
+    keys, vals = _data(rng)
+    with pytest.raises(ChecksumError, match="host run"):
+        _spill(keys, vals,
+               faults=FaultPolicy(seed=6, fail_at={"host_corruption": [1]}))
+
+
+def test_corruption_recovers_from_round_checkpoint(rng):
+    keys, vals = _data(rng)
+    want_k, want_v, _ = _spill(keys, vals)
+    with tempfile.TemporaryDirectory() as ckpt:
+        got_k, got_v, st_ = _spill(
+            keys, vals, checkpoint_dir=ckpt,
+            faults=FaultPolicy(seed=6, fail_at={"host_corruption": [1]}))
+    assert st_.checksum_failures == 1                    # detected + restored
+    assert st_.rounds_checkpointed >= 1
+    assert got_k.tobytes() == want_k.tobytes()
+    assert got_v.tobytes() == want_v.tobytes()
+
+
+def test_checkpoint_requires_spill_regime(rng):
+    keys, vals = _data(rng, n=256)
+    with pytest.raises(ValueError, match="host-spill"):
+        oocsort(keys, 64, values=vals, checkpoint_dir="/tmp/nope")
+    with pytest.raises(ValueError, match="checkpoint_every"):
+        oocsort(keys, 64, values=vals, spill_budget_bytes=BUDGET,
+                checkpoint_dir="/tmp/nope", checkpoint_every=0)
+
+
+def test_resume_from_empty_dir_raises():
+    with tempfile.TemporaryDirectory() as d:
+        with pytest.raises(ValueError, match="no checkpointed rounds"):
+            oocsort(None, 0, resume_from=d)
+
+
+# --------------------------- kill-and-resume (acceptance) --------------------
+
+@pytest.mark.parametrize("dtype,kv,fatal_idx", [
+    (np.uint32, True, 0),       # killed at the very first merge launch
+    (np.uint32, True, 7),       # killed mid/late merge
+    (np.float32, True, 7),      # second dtype, KV payload
+    (np.float32, False, 5),     # keys-only
+])
+def test_kill_and_resume_byte_identical(rng, dtype, kv, fatal_idx):
+    keys, vals = _data(rng, dtype=dtype)
+    vals = vals if kv else None
+    clean_probe = FaultPolicy(seed=0)    # zero-fault: pure launch census
+    want = oocsort(keys, CHUNK, values=vals, engine="argsort", tile=TILE,
+                   spill_budget_bytes=BUDGET, return_stats=True,
+                   faults=clean_probe)
+    if kv:
+        want_k, want_v, clean = want
+    else:
+        want_k, clean = want
+    census_probe = FaultPolicy(seed=0)   # fresh; counters via manifest
+    R = clean.rounds_spilled
+    with tempfile.TemporaryDirectory() as ckpt:
+        killer = FaultPolicy(seed=7, fatal_at={"merge_launch": [fatal_idx]})
+        with pytest.raises(FatalFault):
+            oocsort(keys, CHUNK, values=vals, engine="argsort", tile=TILE,
+                    spill_budget_bytes=BUDGET, faults=killer,
+                    checkpoint_dir=ckpt)
+        r = store.latest_step(ckpt)                      # last published round
+        assert r is not None and r < R
+        out = oocsort(None, 0, resume_from=ckpt, faults=census_probe,
+                      spill_budget_bytes=BUDGET, return_stats=True)
+        if kv:
+            got_k, got_v, st_ = out
+            assert got_v.tobytes() == want_v.tobytes()
+        else:
+            got_k, st_ = out
+    assert got_k.tobytes() == want_k.tobytes()           # byte-identical
+    assert st_.rounds_spilled == R - r                   # replay from round r
+    assert st_.device_high_water_bytes <= BUDGET
+    assert st_.faults_injected == 0 and st_.degradations == 0
+    # launch-census conservation: the manifest carries the killed run's op
+    # counters as-of round r, the resumed schedule draws the remainder — one
+    # draw per slab upload / merge launch / slab download — so the resumed
+    # probe's totals land exactly on the uninterrupted run's census: the
+    # per-round / per-slab-sweep launch schedule is unchanged by kill+resume.
+    clean_counts, got_counts = clean_probe.state(), census_probe.state()
+    for site in ("slab_upload", "merge_launch", "slab_download"):
+        assert got_counts.get(site, 0) == clean_counts.get(site, 0), site
+
+
+def test_resume_into_new_checkpoint_dir_continues_publishing(rng):
+    keys, vals = _data(rng)
+    want_k, want_v, _ = _spill(keys, vals)
+    with tempfile.TemporaryDirectory() as a, tempfile.TemporaryDirectory() as b:
+        with pytest.raises(FatalFault):
+            _spill(keys, vals, checkpoint_dir=a,
+                   faults=FaultPolicy(seed=8,
+                                      fatal_at={"merge_launch": [3]}))
+        got_k, got_v = oocsort(None, 0, resume_from=a, checkpoint_dir=b)
+        assert store.latest_step(b) is not None          # re-published
+    assert got_k.tobytes() == want_k.tobytes()
+    assert got_v.tobytes() == want_v.tobytes()
+
+
+def test_resume_values_like_restores_structure(rng):
+    keys, vals = _data(rng)
+    with tempfile.TemporaryDirectory() as ckpt:
+        with pytest.raises(FatalFault):
+            oocsort(keys, CHUNK, values={"idx": vals}, engine="argsort",
+                    tile=TILE, spill_budget_bytes=BUDGET,
+                    checkpoint_dir=ckpt,
+                    faults=FaultPolicy(seed=9,
+                                       fatal_at={"merge_launch": [2]}))
+        got_k, got_v = oocsort(None, 0, resume_from=ckpt,
+                               values_like={"idx": np.empty(0, np.uint32)})
+        assert set(got_v) == {"idx"}
+        with pytest.raises(ValueError, match="leaves"):
+            oocsort(None, 0, resume_from=ckpt,
+                    values_like=(np.empty(0), np.empty(0)))
+
+
+# --------------------------- fault storm (slow wall) -------------------------
+
+@pytest.mark.slow
+@settings(deadline=None, max_examples=8)
+@given(seed=st.integers(0, 2 ** 16),
+       rate=st.floats(0.01, 0.12))
+def test_fault_storm_byte_parity(seed, rate):
+    """Random faults at every transfer/launch site: bytes never change."""
+    rng = np.random.default_rng(seed)
+    keys = rng.integers(0, 2 ** 32, 2000, dtype=np.uint32)
+    vals = np.arange(2000, dtype=np.uint32)
+    want_k, want_v = oocsort(keys, 600, values=vals, engine="argsort",
+                             tile=TILE, spill_budget_bytes=BUDGET)
+    sites = [s for s in FAULT_SITES if s != "host_corruption"]
+    got_k, got_v, st_ = oocsort(
+        keys, 600, values=vals, engine="argsort", tile=TILE,
+        spill_budget_bytes=BUDGET,
+        faults=FaultPolicy(seed=seed, rates={s: rate for s in sites}),
+        retry=RetryPolicy(max_retries=16), return_stats=True)
+    assert got_k.tobytes() == want_k.tobytes()
+    assert got_v.tobytes() == want_v.tobytes()
+    assert st_.degradations == 0                 # 16 retries absorb any burst
+    assert st_.h2d_bytes + st_.d2h_bytes == (st_.chunk_link_bytes +
+                                             st_.spill_link_bytes +
+                                             st_.retry_link_bytes)

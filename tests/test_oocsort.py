@@ -201,6 +201,24 @@ def test_oocsort_validation(rng):
                     values=np.arange(4, dtype=np.int64))
 
 
+def test_oocsort_validation_names_offending_chunk():
+    """Mismatch errors point at the chunk index that broke the contract —
+    a multi-GB reader stream is undebuggable without it."""
+    ok = np.zeros(4, np.uint32)
+    with pytest.raises(ValueError, match=r"chunk 1.*key dtype"):
+        oocsort(iter([ok, np.zeros(4, np.int32)]), 4)
+    with pytest.raises(ValueError, match=r"chunk 2.*value structure"):
+        oocsort(iter([(ok, ok), (ok, ok),
+                      (ok, (ok, ok))]), 4)
+    with pytest.raises(ValueError, match=r"chunk 1.*value dtypes"):
+        oocsort(iter([(ok, np.zeros(4, np.int32)),
+                      (ok, np.zeros(4, np.int64))]), 4)
+    with pytest.raises(ValueError, match=r"chunk 0.*1-D"):
+        oocsort(iter([np.zeros((2, 2), np.uint32)]), 4)
+    with pytest.raises(ValueError, match=r"chunk 1.*match the key length"):
+        oocsort(iter([(ok, ok), (ok, np.zeros(3, np.uint32))]), 4)
+
+
 def test_length_bucketing_ooc_route(rng):
     """data.pipeline routes shard-sized corpora through oocsort: same packing
     contract as the LSD path."""
