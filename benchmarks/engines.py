@@ -48,13 +48,27 @@ def collect(fast: bool = True, smoke: bool = False) -> dict:
     return annotate(out)
 
 
+#: THE ratio convention, embedded in every BENCH JSON so the files are
+#: self-interpreting: a ratio row is baseline time over contender time, so
+#: values > 1 mean the contender (the kernel engine unless the row name
+#: carries a ``/<contender>`` suffix) is faster and values < 1 mean it is
+#: slower — interpret-mode CPU runs sit below 1 by overhead, which the
+#: ``notes`` entries spell out per row.
+RATIO_CONVENTION = ("ratios/* = baseline_us / contender_us; > 1 means the "
+                    "contender (kernel unless suffixed) is FASTER than the "
+                    "baseline, < 1 means slower")
+
+
 def annotate(rows: dict, baseline: str = "argsort",
              contender: str = "kernel") -> dict:
     """Add contender-vs-baseline speedup ratios and regression notes in place.
 
     ``ratios/<kind>/n=<n>`` = baseline_us / contender_us (> 1: contender
-    faster; non-default contenders get a ``/<contender>`` suffix so several
-    pairings coexist in one file).  ``notes`` is a list of human-readable
+    faster, < 1: contender slower — pinned machine-readably by the
+    ``ratio_convention`` field this function stamps into the rows; the
+    ROADMAP's "> 1 = kernel wins" phrasing refers to this same orientation).
+    Non-default contenders get a ``/<contender>`` suffix so several
+    pairings coexist in one file.  ``notes`` is a list of human-readable
     warnings, non-empty whenever the contender engine is slower than the
     baseline it must eventually beat — the self-interpretation contract
     every BENCH file (BENCH_hybrid.json, BENCH_ooc.json) carries.  Repeated
@@ -62,6 +76,7 @@ def annotate(rows: dict, baseline: str = "argsort",
     """
     ratios = {}
     notes = rows.get("notes", [])
+    rows["ratio_convention"] = RATIO_CONVENTION
     suffix = "" if contender == "kernel" else f"/{contender}"
     for name, us in list(rows.items()):
         if not (isinstance(us, float) and name.endswith(f"/{baseline}")):
@@ -112,7 +127,7 @@ def main(fast: bool = True, smoke: bool = False, baseline: dict = None) -> dict:
     if baseline:
         baseline_delta_notes(rows, baseline)
     for name, us in rows.items():
-        if name == "notes":
+        if not isinstance(us, float):    # notes, ratio_convention
             continue
         if name.startswith("ratios/"):
             row(f"engines/{name}", 0.0, f"{us:.3f}x-argsort-over-kernel")

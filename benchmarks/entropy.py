@@ -1,0 +1,118 @@
+"""Entropy ladder: adaptive vs static kernel-engine sweep (``entropy/...``).
+
+Times ``hybrid_sort(engine="kernel")`` with the entropy-adaptive schedule on
+(the default: static live-bit narrowing + mid-sort elision of
+single-occupied-digit passes) against the same kernel forced to the full
+nominal ⌈k/d⌉ schedule (``adaptive=False``), across the Thearling entropy
+ladder plus the §5 skew shapes (clustered, shared-prefix, constant).
+
+Every rung contributes four rows to BENCH_hybrid.json:
+
+  ``entropy/<rung>/n=<n>/static``           nominal-schedule kernel time (us)
+  ``entropy/<rung>/n=<n>/adaptive``         adaptive-schedule kernel time (us)
+  ``entropy/<rung>/n=<n>/passes_executed``  counting passes actually launched
+  ``entropy/<rung>/n=<n>/passes_nominal``   the ⌈k/d⌉ the static kernel runs
+
+plus the ``ratios/entropy/.../adaptive`` speedup rows from
+``engines.annotate`` (static_us / adaptive_us — > 1 means elision pays; the
+``ratio_convention`` field pins the orientation).  The perf gate: >= 1.3x on
+the low-entropy rungs ``clustered4`` / ``prefix16`` / ``constant`` (dead or
+single-occupied digit positions the static schedule still launches passes
+for), <= 1.05x slowdown on uniform keys (where the only adaptive cost is
+the skip predicate reading the histogram the fused pass already produced).
+The Thearling AND rungs (``ands1``/``ands3``) sit near 1.0x by design:
+AND-ed keys keep every bit position live, so their pass-count savings come
+from the pre-existing done-bucket early exit, which the static schedule
+shares — the rows document that boundary.  Pass-count *correctness*
+(executed < nominal, census-gated) lives in tests/test_adaptive.py — these
+rows track the speed.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import timeit, row
+from benchmarks.engines import annotate
+from repro.core import SortConfig, hybrid_sort
+from repro.core import model as sort_model
+from repro.data.distributions import clustered_keys, constant_keys, \
+    entropy_keys
+
+# the engine sweep's config (benchmarks.engines.CFG): multi-block segments,
+# interpret-tractable tiles
+CFG = SortConfig(d=8, kpb=256, local_threshold=768, merge_threshold=512)
+
+
+def _rungs(rng, n):
+    """(name, keys) per rung, uniform first — the no-regression anchor.
+
+    ``clustered4`` is the mid-sort-elision showcase: 4 clusters aligned to
+    the top digit with live low bytes, so the segments stay above the
+    local-sort threshold while two whole digit positions are constant —
+    the static schedule launches passes over them, the adaptive one elides
+    them off the fused launch's free next-pass histogram.
+    """
+    prefix = (jnp.full((n,), 0xABCD << 16, jnp.uint32)
+              | jnp.asarray(rng.integers(0, 1 << 16, n).astype(np.uint32)))
+    clustered4 = jnp.asarray(
+        (rng.integers(0, 4, n).astype(np.uint32) << np.uint32(24))
+        | rng.integers(0, 1 << 8, n).astype(np.uint32))
+    return [
+        ("uniform", jnp.asarray(entropy_keys(rng, n, 0))),
+        ("ands1", jnp.asarray(entropy_keys(rng, n, 1))),
+        ("ands3", jnp.asarray(entropy_keys(rng, n, 3))),
+        ("clustered", jnp.asarray(clustered_keys(rng, n))),
+        ("clustered4", clustered4),
+        ("prefix16", prefix),
+        ("constant", jnp.asarray(constant_keys(n))),
+    ]
+
+
+def collect(fast: bool = True, smoke: bool = False) -> dict:
+    if smoke:
+        sizes = [1 << 10]
+    elif fast:
+        sizes = [1 << 14]                # the acceptance-gated size (16384)
+    else:
+        sizes = [1 << 14, 1 << 16]
+    rng = np.random.default_rng(0)
+    out = {}
+    for n in sizes:
+        nominal = sort_model.num_digits(32, CFG.d)
+        for name, x in _rungs(rng, n):
+            t_s = timeit(lambda a: hybrid_sort(a, cfg=CFG, engine="kernel",
+                                               adaptive=False), x) * 1e6
+            t_a = timeit(lambda a: hybrid_sort(a, cfg=CFG,
+                                               engine="kernel"), x) * 1e6
+            _, st = hybrid_sort(x, cfg=CFG, engine="kernel",
+                                return_stats=True)
+            stem = f"entropy/{name}/n={n}"
+            out[f"{stem}/static"] = t_s
+            out[f"{stem}/adaptive"] = t_a
+            out[f"{stem}/passes_executed"] = float(st.counting_passes)
+            out[f"{stem}/passes_nominal"] = float(nominal)
+    return annotate(out, baseline="static", contender="adaptive")
+
+
+def main(fast: bool = True, smoke: bool = False, rows: dict = None) -> dict:
+    """Run the sweep; merge into ``rows`` (the engine-sweep dict) if given."""
+    swept = collect(fast, smoke=smoke)
+    for name, us in swept.items():
+        if not isinstance(us, float):    # notes, ratio_convention
+            continue
+        if name.startswith("ratios/"):
+            row(name, 0.0, f"{us:.3f}x-static-over-adaptive")
+        elif name.endswith(("/passes_executed", "/passes_nominal")):
+            row(name, 0.0, f"{us:.0f}passes")
+        else:
+            n = int(name.split("n=")[1].split("/")[0])
+            row(name, us, f"{1e3 * us / n:.2f}ns/key")
+    for note in swept["notes"]:
+        print(f"# WARNING {note}")
+    if rows is not None:
+        notes = rows.get("notes", []) + swept.pop("notes")
+        rows.update(swept)
+        rows["notes"] = notes
+        return rows
+    return swept

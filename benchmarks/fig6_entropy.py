@@ -4,9 +4,14 @@ Hybrid radix sort vs the LSD baseline (CUB proxy, d=5; pass --lsd-bits 7 for
 the CUB-1.6.4 appendix variant) vs XLA's built-in sort, across the Thearling
 entropy ladder (uniform -> constant), for 32-bit keys and 32/32 pairs.
 
-Derived columns report the *memory-traffic model*: passes executed x 3 array
-touches (2R+1W) + local-sort 2 touches — the quantity the paper's speedup is
-built on — and the implied time on the TPU target (819 GB/s HBM).
+Derived columns report the *memory-traffic model* for the FUSED engine
+(ROADMAP §4.3 table): each executed counting pass touches keys and values
+twice (1R+1W — pass i's scatter computes pass i+1's histogram for free),
+plus ONE prologue histogram read of the keys, plus local-sort 2 touches —
+the quantity the paper's speedup is built on — and the implied time on the
+TPU target (819 GB/s HBM).  The ``adaptive`` column reports executed vs
+nominal ⌈k/d⌉ pass counts (entropy-adaptive elision); the LSD baseline is
+timed with ``adaptive=False`` so it stays the CUB proxy.
 """
 from __future__ import annotations
 
@@ -22,9 +27,17 @@ from repro.utils.roofline import HBM_BW
 
 
 def traffic_model_bytes(n, key_bytes, passes, local_sorted, value_bytes=0):
-    per_pass = n * (3 * key_bytes + 2 * value_bytes)
+    """Fused-engine key/value bytes: ``(2·p + 1)·n·b_k + 2·p·n·b_v`` + local.
+
+    Each executed pass reads and writes every key/value ONCE (the fused
+    launch folds the next pass's histogram into the scatter, §4.3); the
+    ``+ 1`` is pass 0's prologue histogram sweep over the keys.  The old
+    unfused 3-touch formula overcharged every pass by one key read.
+    """
+    per_pass = n * 2 * (key_bytes + value_bytes)
+    prologue = n * key_bytes if passes else 0
     local = n * 2 * (key_bytes + value_bytes) if local_sorted else 0
-    return passes * per_pass + local
+    return passes * per_pass + prologue + local
 
 
 def run(n: int = 1 << 20, pairs: bool = False, lsd_bits: int = 5,
@@ -43,7 +56,9 @@ def run(n: int = 1 << 20, pairs: bool = False, lsd_bits: int = 5,
             return out
 
         def l_sort():
-            return lsd_sort(xj, vals, d=lsd_bits)
+            # adaptive=False: the baseline stays the CUB proxy's full
+            # ⌈k/d⌉-pass schedule — elision is the contender's edge
+            return lsd_sort(xj, vals, d=lsd_bits, adaptive=False)
 
         t_h = timeit(h_sort)
         t_l = timeit(l_sort)
@@ -51,6 +66,8 @@ def run(n: int = 1 << 20, pairs: bool = False, lsd_bits: int = 5,
         res = h_sort()
         stats = res[-1]
         passes = int(stats.counting_passes)
+        elided = int(stats.elided_passes)
+        nominal = sort_model.num_digits(32, cfg.d)
         local = bool(stats.used_local_sort)
 
         vb = 4 if pairs else 0
@@ -60,6 +77,10 @@ def run(n: int = 1 << 20, pairs: bool = False, lsd_bits: int = 5,
         row(f"fig6/{kind}/e{ent:05.2f}/hybrid", t_h * 1e6,
             f"passes={passes}+local={int(local)} model_traffic={hb/1e6:.0f}MB "
             f"tpu_time={hb/HBM_BW*1e3:.2f}ms rate={n/t_h/1e6:.1f}Mk/s")
+        row(f"fig6/{kind}/e{ent:05.2f}/adaptive", 0.0,
+            f"executed={passes} elided={elided} nominal={nominal} "
+            f"(executed+elided <= nominal; elision is census-gated, "
+            f"see tests/test_adaptive.py)")
         row(f"fig6/{kind}/e{ent:05.2f}/lsd{lsd_bits}", t_l * 1e6,
             f"passes={nd_lsd} model_traffic={lb/1e6:.0f}MB "
             f"tpu_time={lb/HBM_BW*1e3:.2f}ms rate={n/t_l/1e6:.1f}Mk/s")

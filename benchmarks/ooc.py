@@ -187,7 +187,7 @@ def main(fast: bool = True, smoke: bool = False, spill: bool = False,
             rows.update(srows)
             rows["notes"] = notes
     for name, us in rows.items():
-        if name == "notes":
+        if not isinstance(us, float):    # notes, ratio_convention
             continue
         if name.startswith("ratios/faults/"):
             row(f"ooc/{name}", 0.0, f"{us:.3f}x-plain-over-resilient")

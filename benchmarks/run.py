@@ -20,8 +20,16 @@ device slabs vs device-resident merge vs one-shot argsort).  ``--faults``
 adds the resilience-overhead rows (plain vs checksummed+checkpointed vs
 injected-fault spill runs, gated ≤ 1.15x on the fault-free path).
 
+``--entropy`` adds the entropy-ladder sweep (``benchmarks.entropy``):
+adaptive vs static kernel-engine times plus executed-vs-nominal pass counts
+per Thearling rung, as ``entropy/...`` rows merged into the same
+BENCH_hybrid.json (``ratios/entropy/.../adaptive`` > 1 means pass elision
+pays; the gate is >= 1.3x on low-entropy rungs, <= 1.05x regression on
+uniform).
+
 ``python -m benchmarks.run [--full] [--smoke] [--only fig6,...]
-                           [--json [PATH]] [--ooc] [--spill] [--faults]``
+                           [--json [PATH]] [--entropy] [--ooc] [--spill]
+                           [--faults]``
 """
 from __future__ import annotations
 
@@ -46,6 +54,9 @@ def main() -> None:
     ap.add_argument("--json", nargs="?", const="BENCH_hybrid.json",
                     default=None, metavar="PATH",
                     help="write the engine-sweep rows to PATH as JSON")
+    ap.add_argument("--entropy", action="store_true",
+                    help="also run the entropy-ladder adaptive-vs-static "
+                         "sweep (entropy/... rows in BENCH_hybrid.json)")
     ap.add_argument("--ooc", action="store_true",
                     help="also run the out-of-core sweep (BENCH_ooc.json)")
     ap.add_argument("--spill", action="store_true",
@@ -92,8 +103,16 @@ def main() -> None:
         if os.path.exists(args.json):        # previous sweep = the baseline:
             with open(args.json) as f:       # ratio deltas land in `notes`
                 baseline = json.load(f)
-        dump(engines.main(fast=not args.full, smoke=args.smoke,
-                          baseline=baseline), args.json)
+        rows = engines.main(fast=not args.full, smoke=args.smoke,
+                            baseline=baseline)
+        if args.entropy:
+            from benchmarks import entropy
+            rows = entropy.main(fast=not args.full, smoke=args.smoke,
+                                rows=rows)
+        dump(rows, args.json)
+    elif args.entropy:
+        from benchmarks import entropy
+        entropy.main(fast=not args.full, smoke=args.smoke)
 
     if args.ooc:
         from benchmarks import ooc

@@ -81,8 +81,8 @@ fi
 
 # smoke benches run BEFORE the slow suite so the BENCH artifacts exist even
 # when a slow test fails (the upload step runs if: always())
-echo "=== benchmark smoke (interpret mode, engine + ooc + spill + faults) ==="
-python -m benchmarks.run --json BENCH_smoke.json --smoke --ooc --spill --faults
+echo "=== benchmark smoke (interpret mode, engine + entropy + ooc + spill + faults) ==="
+python -m benchmarks.run --json BENCH_smoke.json --smoke --entropy --ooc --spill --faults
 
 echo "=== tier-1 tests (slow stage: -m slow) ==="
 run_stage -m "slow" "$@"

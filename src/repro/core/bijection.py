@@ -25,8 +25,24 @@ and ``oocsort``):
     be silently canonicalised.
 
 All functions are jit-safe and shape-preserving.
+
+Compressed-key mode (entropy-adaptive sorting): ``CompressionPlan`` bit-packs
+the *live* columns of the ordered-bits domain — the bit positions where keys
+actually differ — into a contiguous low window, dropping globally-constant
+columns entirely.  Two ordered values differ first at some live bit (their
+dead bits are equal by construction), and packing preserves the relative
+significance order of live bits, so the packed keys sort in exactly the same
+order as the originals; ``unpack_ordered_bits`` then restores the dead
+columns bit-exactly.  Plans are built from host-resident key summaries
+(Python-int masks), so packing lowers to a statically unrolled shift/mask
+chain under jit and has a NumPy mirror for host-resident (out-of-core
+spilled) runs.  A uint64 key set with <= 32 live bits packs into a uint32
+carrier — half the sort traffic and no x64 requirement on the device path
+that only ever sees the packed representation.
 """
 from __future__ import annotations
+
+from typing import List, NamedTuple, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -136,3 +152,122 @@ def from_ordered_bits_np(ubits: np.ndarray, dtype) -> np.ndarray:
     was_neg = (ubits & sign) == 0  # encoded negatives have sign bit cleared
     bits = np.where(was_neg, ~ubits, ubits ^ sign)
     return bits.view(dt)
+
+
+# ---------------------------------------------------------------------------
+# Compressed keys: pack out globally-dead bit columns (entropy adaptation)
+# ---------------------------------------------------------------------------
+
+_WIDTH_TO_UNSIGNED = {8: np.uint8, 16: np.uint16, 32: np.uint32, 64: np.uint64}
+
+
+class CompressionPlan(NamedTuple):
+    """Static bit-packing plan over the ordered-bits carrier domain.
+
+    ``mask`` marks the live columns (bit positions where at least two keys
+    differ), ``dead`` holds the constant value every key shares on the
+    remaining columns, and ``source_bits`` is the carrier width both are
+    defined over.  All three are Python ints, so a plan is a static jit
+    argument and the pack/unpack shift chains unroll at trace time.
+    """
+
+    mask: int
+    dead: int
+    source_bits: int
+
+    @property
+    def packed_bits(self) -> int:
+        """Live-bit count; at least 1 so an all-equal key set still packs
+        into a real (all-zero) carrier instead of a zero-width one."""
+        return max(1, bin(self.mask).count("1"))
+
+    def runs(self) -> List[Tuple[int, int, int]]:
+        """Contiguous live-bit runs as ``(src_lo, width, dst_lo)`` triples,
+        least-significant first — one shift/mask/or per run to pack."""
+        out: List[Tuple[int, int, int]] = []
+        m, bit, dst = self.mask, 0, 0
+        while m >> bit:
+            while not (m >> bit) & 1:
+                bit += 1
+            lo = bit
+            while bit < self.source_bits and (m >> bit) & 1:
+                bit += 1
+            out.append((lo, bit - lo, dst))
+            dst += bit - lo
+        return out
+
+
+def packed_carrier_dtype(plan: CompressionPlan) -> np.dtype:
+    """Smallest unsigned dtype that holds the packed live bits."""
+    for width, dt in sorted(_WIDTH_TO_UNSIGNED.items()):
+        if plan.packed_bits <= width:
+            return np.dtype(dt)
+    raise ValueError(f"packed width {plan.packed_bits} exceeds 64 bits")
+
+
+def source_carrier_dtype(plan: CompressionPlan) -> np.dtype:
+    """Unsigned dtype of the (uncompressed) ordered-bits domain."""
+    return np.dtype(_WIDTH_TO_UNSIGNED[plan.source_bits])
+
+
+def compression_plan_np(ubits: np.ndarray) -> CompressionPlan:
+    """Build a plan from a host-resident ordered-bits array.
+
+    One OR-reduce and one AND-reduce over the keys: live = OR ^ AND (the
+    columns where the reduces disagree), dead value = the shared AND bits
+    outside the live mask.  An empty key set gets the identity plan (full
+    mask) — nothing is known about the columns, so nothing is dropped.
+    """
+    ubits = np.asarray(ubits)
+    bits = np.iinfo(ubits.dtype).bits
+    if ubits.size == 0:
+        return CompressionPlan(mask=(1 << bits) - 1, dead=0, source_bits=bits)
+    flat = ubits.reshape(-1)
+    orv = int(np.bitwise_or.reduce(flat))
+    andv = int(np.bitwise_and.reduce(flat))
+    mask = orv ^ andv
+    return CompressionPlan(mask=mask, dead=andv & ~mask, source_bits=bits)
+
+
+def pack_ordered_bits(ubits: jnp.ndarray, plan: CompressionPlan) -> jnp.ndarray:
+    """Drop the dead columns: gather the live runs into a contiguous low
+    window and narrow to the smallest carrier that holds them."""
+    src = np.dtype(ubits.dtype)
+    acc = jnp.zeros(ubits.shape, dtype=src)
+    for lo, width, dst in plan.runs():
+        m = src.type(((1 << width) - 1) & ((1 << plan.source_bits) - 1))
+        acc = acc | (((ubits >> lo) & m) << dst)
+    return acc.astype(packed_carrier_dtype(plan))
+
+
+def unpack_ordered_bits(packed: jnp.ndarray, plan: CompressionPlan) -> jnp.ndarray:
+    """Exact inverse of :func:`pack_ordered_bits`: widen back to the source
+    carrier, scatter the live runs home, and restore the dead-bit constant."""
+    src = source_carrier_dtype(plan)
+    x = packed.astype(src)
+    acc = jnp.full(packed.shape, src.type(plan.dead), dtype=src)
+    for lo, width, dst in plan.runs():
+        m = src.type(((1 << width) - 1) & ((1 << plan.source_bits) - 1))
+        acc = acc | (((x >> dst) & m) << lo)
+    return acc
+
+
+def pack_ordered_bits_np(ubits: np.ndarray, plan: CompressionPlan) -> np.ndarray:
+    """NumPy mirror of :func:`pack_ordered_bits` (out-of-core host chunks)."""
+    src = np.dtype(ubits.dtype)
+    acc = np.zeros(ubits.shape, dtype=src)
+    for lo, width, dst in plan.runs():
+        m = src.type(((1 << width) - 1) & ((1 << plan.source_bits) - 1))
+        acc |= ((ubits >> src.type(lo)) & m) << src.type(dst)
+    return acc.astype(packed_carrier_dtype(plan), copy=False)
+
+
+def unpack_ordered_bits_np(packed: np.ndarray, plan: CompressionPlan) -> np.ndarray:
+    """NumPy mirror of :func:`unpack_ordered_bits`."""
+    src = source_carrier_dtype(plan)
+    x = np.asarray(packed).astype(src, copy=False)
+    acc = np.full(x.shape, src.type(plan.dead), dtype=src)
+    for lo, width, dst in plan.runs():
+        m = src.type(((1 << width) - 1) & ((1 << plan.source_bits) - 1))
+        acc |= ((x >> src.type(dst)) & m) << src.type(lo)
+    return acc

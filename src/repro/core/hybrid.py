@@ -30,6 +30,27 @@ Three interchangeable engines compute each pass (byte-identical outputs):
     Zero comparison sorts in the traced HLO.
   * ``argsort`` — two fused XLA stable sorts per pass; the CPU default.
   * ``scan``    — the O(n) chunked-histogram fallback from ``core.ranks``.
+
+Entropy-adaptive schedule (``cfg.adaptive`` / the ``adaptive`` argument):
+
+  * *static narrowing* — when the keys are concrete (not traced), one host
+    OR/AND-reduce finds the globally live bit window [lo, hi): dead high
+    bits (shared prefixes) and dead low bits never get a pass, so the
+    schedule runs ⌈(hi - lo)/d⌉ passes instead of ⌈k/d⌉.  Traced keys keep
+    the full window — narrowing never changes a compiled trace's shape.
+  * *mid-sort elision* — the pass loop watches the histogram it already has
+    (fused out of the previous scatter): when every active segment has a
+    single occupied digit the pass's scatter is the identity, so the launch
+    is skipped while the bookkeeping still advances.  The fused kernel
+    histograms a second *lookahead* window (pass i+2) alongside pass i+1's
+    so an elided pass leaves the next histogram in hand; elision therefore
+    needs no extra key sweep and no extra launch — each elided pass is an
+    elided ``pallas_call``.  All engines evaluate the identical predicate,
+    keeping outputs and ``SortStats`` byte-identical across engines.
+  * *compressed keys* (``hybrid_sort(compress=True)``, concrete keys only)
+    — ``bijection.CompressionPlan`` packs out every dead bit column and
+    sorts the narrowed carrier (uint64 keys with <= 32 live bits sort as
+    uint32), inverting exactly afterwards.
 """
 from __future__ import annotations
 
@@ -38,6 +59,7 @@ from typing import Any, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 
 from repro.core import bijection, model, plan
@@ -52,36 +74,83 @@ class SortStats(NamedTuple):
     used_local_sort: jnp.ndarray   # bool: did the final local sort run
     num_segments: jnp.ndarray      # segments at exit (I3 bound check)
     max_segment: jnp.ndarray       # largest segment at exit
+    elided_passes: jnp.ndarray = jnp.int32(0)  # adaptive: passes advanced
+                                               # with no launch/partition
 
 
-def _counting_pass_jnp(ukeys, vals, seg_id, done, pass_idx, *, k, d, a_max,
-                       cfg, engine):
+def live_bit_window(ukeys) -> tuple:
+    """Static live-bit window [lo, hi) of a host-resident ordered-bits array.
+
+    One OR-reduce and one AND-reduce: bits where they agree are globally
+    constant and carry no ordering information.  Returns ``(lo, hi)`` as
+    Python ints — ``(0, 0)`` when every key is equal (or the array is
+    empty), so a narrowed schedule plans zero passes.
+    """
+    ukeys = np.asarray(ukeys).reshape(-1)
+    if ukeys.size == 0:
+        return 0, 0
+    orv = int(np.bitwise_or.reduce(ukeys))
+    andv = int(np.bitwise_and.reduce(ukeys))
+    live = orv ^ andv
+    if not live:
+        return 0, 0
+    return (live & -live).bit_length() - 1, live.bit_length()
+
+
+def _skip_predicate(hist, nxt_valid, p, nd):
+    """The shared elision predicate (identical across all engines).
+
+    A pass is elidable when every active segment has at most one occupied
+    digit — its stable scatter is then the identity permutation.  It may
+    actually be skipped only when the NEXT pass's histogram is already in
+    hand (``nxt_valid``: the previous pass executed with lookahead) or when
+    this is the final pass (the loop exits; no next histogram is needed).
+    """
+    single = jnp.all(jnp.sum(hist > 0, axis=1) <= 1)
+    return single & (nxt_valid | (p >= nd - 1))
+
+
+def _counting_pass_jnp(state, *, k, d, lo, a_max, nd, cfg, engine, adaptive):
     """One counting pass, jnp engines: XLA stable sorts or the scan ranks."""
+    ukeys, vals, seg_id, done, nxt_valid, p, p_exec, n_eld = state
     n = ukeys.shape[0]
     r = 1 << d
     active = ~done
     asegs = plan.active_segments(seg_id, done, a_max)
     asid = asegs.index
 
-    digit = plan.digit_at(ukeys, pass_idx, k, d)
+    digit = plan.digit_at(ukeys, p, k, d, lo=lo)
     # (a, digit) histogram — only active keys contribute (M2 of the model)
     idx = jnp.where(active, asid * r + digit, 0)
     hist = jnp.zeros((a_max * r,), jnp.int32).at[idx].add(
         active.astype(jnp.int32)).reshape(a_max, r)
 
-    # destination permutation: stable partition by (active segment, digit);
-    # done keys carry a +inf-like composite and stay in place.
-    sentinel = jnp.int32(a_max * r)
-    composite = jnp.where(active, asid * r + digit, sentinel)
-    dest0 = stable_partition_dest(composite, a_max * r + 1, engine=engine)
-    done_rank = stable_partition_dest(done.astype(jnp.int32), 2,
-                                      engine=engine)
-    slots = jnp.zeros((n,), jnp.int32).at[done_rank].set(
-        jnp.arange(n, dtype=jnp.int32))   # active slots asc, then done asc
-    dest = slots[dest0]
+    def partition():
+        # destination permutation: stable partition by (active segment,
+        # digit); done keys carry a +inf-like composite and stay in place.
+        sentinel = jnp.int32(a_max * r)
+        composite = jnp.where(active, asid * r + digit, sentinel)
+        dest0 = stable_partition_dest(composite, a_max * r + 1, engine=engine)
+        done_rank = stable_partition_dest(done.astype(jnp.int32), 2,
+                                          engine=engine)
+        slots = jnp.zeros((n,), jnp.int32).at[done_rank].set(
+            jnp.arange(n, dtype=jnp.int32))   # active slots asc, then done asc
+        dest = slots[dest0]
+        new_keys = jnp.zeros_like(ukeys).at[dest].set(ukeys)
+        new_vals = jax.tree.map(lambda v: jnp.zeros_like(v).at[dest].set(v),
+                                vals)
+        return new_keys, new_vals
 
-    new_keys = jnp.zeros_like(ukeys).at[dest].set(ukeys)
-    new_vals = jax.tree.map(lambda v: jnp.zeros_like(v).at[dest].set(v), vals)
+    if adaptive:
+        skip = _skip_predicate(hist, nxt_valid, p, nd)
+        new_keys, new_vals = lax.cond(skip, lambda: (ukeys, vals), partition)
+        nvalid = (~skip) & (p + 2 < nd)
+        p_exec = p_exec + (~skip).astype(jnp.int32)
+        n_eld = n_eld + skip.astype(jnp.int32)
+    else:
+        new_keys, new_vals = partition()
+        nvalid = nxt_valid
+        p_exec = p_exec + 1
 
     # bucket bookkeeping: merged-group starts (R3) become the new boundaries
     gstart, gdone = plan.merge_rows(hist, cfg.local_threshold,
@@ -90,37 +159,70 @@ def _counting_pass_jnp(ukeys, vals, seg_id, done, pass_idx, *, k, d, a_max,
     dest_base = asegs.base[:, None] + excl                    # (a_max, r)
     new_seg, new_done = plan.apply_pass_bookkeeping(
         seg_id, done, asegs, hist, gstart, gdone, dest_base)
-    return new_keys, new_vals, new_seg, new_done
+    return (new_keys, new_vals, new_seg, new_done, nvalid, p + 1, p_exec,
+            n_eld)
 
 
-def _counting_pass_fused(state, *, k, d, a_max, g_max, n, cfg, interpret):
+def _counting_pass_fused(state, *, k, d, lo, a_max, g_max, n, nd, cfg,
+                         adaptive, interpret):
     """One counting pass, kernel engine: a single fused Pallas launch.
 
     ``state`` carries the ping-pong buffers, the dense bucket state and the
     per-active-segment histogram of THIS pass's digit — fused out of the
     previous pass's scatter (§4.3; the first pass's comes from the prologue
-    sweep).  The launch reads the keys once and writes them once.
+    sweep).  The launch reads the keys once and writes them once.  Under
+    the adaptive schedule the state also carries the *lookahead* histogram
+    (next pass's window, fused out of the same scatter) and its validity
+    flag; when the shared skip predicate fires, the launch is elided — the
+    identity scatter never runs, the ping-pong buffers stand still, and
+    only the bookkeeping advances.  Exactly one ``pallas_call`` sits in the
+    loop body either way (the elided branch contains none), which is what
+    keeps the launch census per EXECUTED pass.
     """
-    ck, cv, ak, av, seg_id, done, seg_hist, p = state
+    (ck, cv, ak, av, seg_id, done, hist_cur, hist_nxt, nxt_valid, p, p_exec,
+     n_eld) = state
     r = 1 << d
     asegs = plan.active_segments(seg_id, done, a_max)
-    gstart, gdone = plan.merge_rows(seg_hist, cfg.local_threshold,
+    gstart, gdone = plan.merge_rows(hist_cur, cfg.local_threshold,
                                     cfg.merge_threshold)
-    excl = jnp.cumsum(seg_hist, axis=1) - seg_hist
+    excl = jnp.cumsum(hist_cur, axis=1) - hist_cur
     dest_base = asegs.base[:, None] + excl                    # (a_max, r)
-    nsid = plan.next_active_table(seg_hist, cfg.local_threshold, a_max)
-    blocks = plan.make_region_blocks(asegs.base, asegs.size, n, cfg.kpb,
-                                     g_max, batch=cfg.step_batch)
-    sc = plan.digit_window(p, k, d)
-    nk, nv, hist_next = fused.fused_counting_pass(
-        ck, cv, ak, av, sc, *blocks, dest_base, nsid,
-        kpb=cfg.kpb, r=r, a_max=a_max, n=n, interpret=interpret)
+    nsid = plan.next_active_table(hist_cur, cfg.local_threshold, a_max)
     new_seg, new_done = plan.apply_pass_bookkeeping(
-        seg_id, done, asegs, seg_hist, gstart, gdone, dest_base)
+        seg_id, done, asegs, hist_cur, gstart, gdone, dest_base)
+
+    def launch():
+        blocks = plan.make_region_blocks(asegs.base, asegs.size, n, cfg.kpb,
+                                         g_max, batch=cfg.step_batch)
+        sc = plan.digit_window(p, k, d, lo=lo)
+        if adaptive:
+            nk, nv, h1, h2 = fused.fused_counting_pass(
+                ck, cv, ak, av, sc, *blocks, dest_base, nsid,
+                kpb=cfg.kpb, r=r, a_max=a_max, n=n, interpret=interpret,
+                lookahead=True)
+            return (nk, nv, ck, cv, h1.reshape(a_max, r),
+                    h2.reshape(a_max, r), p + 2 < nd, p_exec + 1, n_eld)
+        nk, nv, h1 = fused.fused_counting_pass(
+            ck, cv, ak, av, sc, *blocks, dest_base, nsid,
+            kpb=cfg.kpb, r=r, a_max=a_max, n=n, interpret=interpret)
+        return (nk, nv, ck, cv, h1.reshape(a_max, r), hist_nxt, nxt_valid,
+                p_exec + 1, n_eld)
+
+    if adaptive:
+        def elide():
+            # identity scatter: buffers and positions stand still; the
+            # lookahead histogram becomes the next pass's current histogram
+            return (ck, cv, ak, av, hist_nxt, jnp.zeros_like(hist_nxt),
+                    jnp.bool_(False), p_exec, n_eld + 1)
+        skip = _skip_predicate(hist_cur, nxt_valid, p, nd)
+        nk, nv, nak, nav, h_cur, h_nxt, nvalid, npe, nne = lax.cond(
+            skip, elide, launch)
+    else:
+        nk, nv, nak, nav, h_cur, h_nxt, nvalid, npe, nne = launch()
     # flip: the freshly written buffers become current, the old ones the
-    # donation targets of the next pass
-    return (nk, nv, ck, cv, new_seg, new_done,
-            hist_next.reshape(a_max, r), p + 1)
+    # donation targets of the next pass (an elided pass flips nothing)
+    return (nk, nv, nak, nav, new_seg, new_done, h_cur, h_nxt, nvalid,
+            p + 1, npe, nne)
 
 
 def _local_sort(ukeys, vals, seg_id, done):
@@ -180,56 +282,59 @@ def local_sort_classes(n: int, cfg: model.SortConfig):
 
 @functools.partial(jax.jit, static_argnames=("cfg", "k", "return_stats",
                                              "max_passes", "engine",
-                                             "interpret"))
+                                             "interpret", "lo", "adaptive"))
 def _hybrid_sort_bits(ukeys, vals, cfg: model.SortConfig, k: int,
                       return_stats: bool, max_passes: Optional[int] = None,
-                      engine: str = "argsort", interpret: bool = True):
+                      engine: str = "argsort", interpret: bool = True,
+                      lo: int = 0, adaptive: bool = False):
     n = ukeys.shape[0]
     d = cfg.d
     r = 1 << d
-    nd = model.num_digits(k, d)
+    nd = model.num_digits(max(k - lo, 0), d)   # passes over the live window
     if max_passes is not None:
         nd = min(nd, max_passes)
     a_max = model.max_active_buckets(n, cfg)
 
     done0 = jnp.full((n,), n <= cfg.local_threshold)
     seg0 = jnp.zeros((n,), jnp.int32)
+    nxt_valid0 = jnp.bool_(False)
+    z = jnp.int32(0)
 
     if engine == "kernel":
         g_max = plan.max_region_blocks(n, cfg.kpb, a_max)
         leaves, treedef = jax.tree.flatten(vals)
         (ck, cv), (ak, av) = fused.make_ping_pong(ukeys, leaves, cfg.kpb)
         # the one unfused sweep of the sort: pass 0's histogram (§4.3)
-        w0 = min(d, k)
-        seg_hist0 = fused.initial_histogram(ck, n, k - w0, w0, r, a_max,
-                                            cfg.kpb, interpret=interpret)
+        w0 = min(d, max(k - lo, 1))
+        seg_hist0 = fused.initial_histogram(ck, n, max(k - w0, 0), w0, r,
+                                            a_max, cfg.kpb,
+                                            interpret=interpret)
 
         def cond(state):
-            _, _, _, _, _, done, _, p = state
+            done, p = state[5], state[9]
             return (p < nd) & jnp.any(~done)
 
-        body = functools.partial(_counting_pass_fused, k=k, d=d, a_max=a_max,
-                                 g_max=g_max, n=n, cfg=cfg,
+        body = functools.partial(_counting_pass_fused, k=k, d=d, lo=lo,
+                                 a_max=a_max, g_max=g_max, n=n, nd=nd,
+                                 cfg=cfg, adaptive=adaptive,
                                  interpret=interpret)
-        ck, cv, ak, av, seg, done, _, p = lax.while_loop(
-            cond, body, (ck, cv, ak, av, seg0, done0, seg_hist0,
-                         jnp.int32(0)))
+        (ck, cv, ak, av, seg, done, _, _, _, p, p_exec, n_eld) = \
+            lax.while_loop(cond, body,
+                           (ck, cv, ak, av, seg0, done0, seg_hist0,
+                            jnp.zeros_like(seg_hist0), nxt_valid0,
+                            z, z, z))
         ukeys = ck[:n]
         vals = jax.tree.unflatten(treedef, [v[:n] for v in cv])
     else:
         def cond(state):
-            _, _, _, done, p = state
+            done, p = state[3], state[5]
             return (p < nd) & jnp.any(~done)
 
-        def body(state):
-            ukeys, vals, seg, done, p = state
-            ukeys, vals, seg, done = _counting_pass_jnp(
-                ukeys, vals, seg, done, p, k=k, d=d, a_max=a_max, cfg=cfg,
-                engine=engine)
-            return ukeys, vals, seg, done, p + 1
-
-        ukeys, vals, seg, done, p = lax.while_loop(
-            cond, body, (ukeys, vals, seg0, done0, jnp.int32(0)))
+        body = functools.partial(_counting_pass_jnp, k=k, d=d, lo=lo,
+                                 a_max=a_max, nd=nd, cfg=cfg, engine=engine,
+                                 adaptive=adaptive)
+        ukeys, vals, seg, done, _, p, p_exec, n_eld = lax.while_loop(
+            cond, body, (ukeys, vals, seg0, done0, nxt_valid0, z, z, z))
 
     needs_local = jnp.any(done)
     if engine == "kernel":
@@ -245,16 +350,17 @@ def _hybrid_sort_bits(ukeys, vals, cfg: model.SortConfig, k: int,
     if not return_stats:
         return ukeys, vals, None
     sizes = jnp.bincount(seg, length=n if n else 1)
-    stats = SortStats(counting_passes=p, used_local_sort=needs_local,
+    stats = SortStats(counting_passes=p_exec, used_local_sort=needs_local,
                       num_segments=seg[-1] + 1 if n else jnp.int32(0),
-                      max_segment=sizes.max())
+                      max_segment=sizes.max(), elided_passes=n_eld)
     return ukeys, vals, stats
 
 
 def hybrid_sort(keys: jnp.ndarray, values: Any = None,
                 cfg: Optional[model.SortConfig] = None,
                 return_stats: bool = False, max_passes: Optional[int] = None,
-                engine: Optional[str] = None, interpret: Optional[bool] = None):
+                engine: Optional[str] = None, interpret: Optional[bool] = None,
+                adaptive: Optional[bool] = None, compress: bool = False):
     """Sort ``keys`` (any supported primitive dtype) with the hybrid radix sort.
 
     ``values`` is an optional array or pytree of arrays permuted alongside the
@@ -274,6 +380,15 @@ def hybrid_sort(keys: jnp.ndarray, values: Any = None,
     byte-identical output.  ``interpret`` forces Pallas interpret mode (on
     by default off-TPU).
 
+    ``adaptive`` enables the entropy-adaptive schedule (``None`` defers to
+    ``cfg.adaptive``, on by default): concrete keys get a statically
+    narrowed live-bit window, and single-digit passes are elided mid-sort
+    (bookkeeping advances; no launch happens).  Every pass of the schedule
+    is a stable partition, so the output is byte-identical with the
+    adaptive schedule on or off.  ``compress=True`` (concrete keys only)
+    additionally bit-packs out all dead key columns and sorts the narrowed
+    carrier, inverting the packing exactly afterwards.
+
     Returns ``sorted_keys``, or ``(sorted_keys, permuted_values)`` if values
     were given; append ``stats`` when ``return_stats``.
     """
@@ -285,6 +400,8 @@ def hybrid_sort(keys: jnp.ndarray, values: Any = None,
     if k > 32 and not jax.config.jax_enable_x64:
         raise RuntimeError("64-bit keys require jax_enable_x64")
     cfg = cfg or model.default_config(k // 8)
+    if adaptive is None:
+        adaptive = cfg.adaptive
     # explicit argument > cfg.rank_engine > backend default (with the
     # interpret-only demotion of auto-resolved "kernel", see core.plan)
     engine = plan.resolve_pass_engine(
@@ -295,13 +412,34 @@ def hybrid_sort(keys: jnp.ndarray, values: Any = None,
         if return_stats:
             z = jnp.int32(0)
             return (*((out,) if values is None else out),
-                    SortStats(z, jnp.bool_(False), z, z))
+                    SortStats(z, jnp.bool_(False), z, z, z))
         return out
 
-    ukeys = bijection.to_ordered_bits(keys)
+    concrete = not isinstance(keys, jax.core.Tracer)
+    cplan = None
+    lo, hi = 0, k
+    if compress:
+        if not concrete:
+            raise ValueError("compress=True requires concrete (non-traced) "
+                             "keys: the packing plan is data-dependent")
+        cplan = bijection.compression_plan_np(
+            bijection.to_ordered_bits_np(np.asarray(keys)))
+        ukeys = bijection.pack_ordered_bits(bijection.to_ordered_bits(keys),
+                                            cplan)
+        # every packed column is live by construction; sort just those bits
+        lo, hi = 0, cplan.packed_bits
+    else:
+        ukeys = bijection.to_ordered_bits(keys)
+        if adaptive and concrete:
+            lo, hi = live_bit_window(bijection.to_ordered_bits_np(
+                np.asarray(keys)))
+
     vals = values if values is not None else ()
-    ukeys, vals, stats = _hybrid_sort_bits(ukeys, vals, cfg, k, return_stats,
-                                           max_passes, engine, interpret)
+    ukeys, vals, stats = _hybrid_sort_bits(ukeys, vals, cfg, hi, return_stats,
+                                           max_passes, engine, interpret,
+                                           lo=lo, adaptive=adaptive)
+    if cplan is not None:
+        ukeys = bijection.unpack_ordered_bits(ukeys, cplan)
     out_keys = bijection.from_ordered_bits(ukeys, keys.dtype)
     if values is None:
         return (out_keys, stats) if return_stats else out_keys

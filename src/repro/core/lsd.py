@@ -20,18 +20,23 @@ from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 
-from repro.core import bijection, model, plan
+from repro.core import bijection, hybrid, model, plan
 from repro.core.ranks import stable_partition_dest
 from repro.kernels import fused
 
 
 @functools.partial(jax.jit, static_argnames=("d", "k", "engine", "kpb",
-                                             "step_batch", "interpret"))
+                                             "step_batch", "interpret", "lo"))
 def _lsd_sort_bits(ukeys, vals, d: int, k: int, engine: str, kpb: int,
-                   step_batch: int, interpret: bool):
-    nd = model.num_digits(k, d)
+                   step_batch: int, interpret: bool, lo: int = 0):
+    # [lo, k) is the live-bit window of the entropy-adaptive schedule: bits
+    # outside it are globally constant, and a stable pass over a constant
+    # digit is the identity permutation — eliding it changes nothing, not
+    # even the permutation of equal keys.
+    nd = model.num_digits(max(k - lo, 0), d)
     udt = ukeys.dtype
     n = ukeys.shape[0]
 
@@ -47,12 +52,12 @@ def _lsd_sort_bits(ukeys, vals, d: int, k: int, engine: str, kpb: int,
                                          plan.max_region_blocks(n, kpb, 1),
                                          batch=step_batch)
         nsid = jnp.zeros((r,), jnp.int32)     # every sub-bucket -> segment 0
-        w0 = min(d, k)
-        seg_hist = fused.initial_histogram(ck, n, 0, w0, r, 1, kpb,
+        w0 = min(d, max(k - lo, 1))
+        seg_hist = fused.initial_histogram(ck, n, lo, w0, r, 1, kpb,
                                            interpret=interpret)
         for p in range(nd):
             base_excl = jnp.cumsum(seg_hist, axis=1) - seg_hist
-            sc = plan.lsd_digit_window(p, k, d)
+            sc = plan.lsd_digit_window(p, k, d, lo=lo)
             nk, nv, hist_next = fused.fused_counting_pass(
                 ck, cv, ak, av, sc, *blocks, base_excl, nsid,
                 kpb=kpb, r=r, a_max=1, n=n, interpret=interpret)
@@ -63,9 +68,9 @@ def _lsd_sort_bits(ukeys, vals, d: int, k: int, engine: str, kpb: int,
 
     def body(p, state):
         ukeys, vals = state
-        shift = jnp.array(p * d, udt)
-        # handle partial top digit: pass p covers bits [p*d, min((p+1)*d, k))
-        width = jnp.minimum(d, k - p * d).astype(udt)
+        shift = jnp.asarray(lo + p * d).astype(udt)
+        # partial top digit: pass p covers bits [lo+p*d, min(lo+(p+1)*d, k))
+        width = jnp.minimum(d, k - lo - p * d).astype(udt)
         mask = ((jnp.array(1, udt) << width) - 1).astype(udt)
         digit = ((ukeys >> shift) & mask).astype(jnp.int32)
         dest = stable_partition_dest(digit, 1 << d, engine=engine)
@@ -79,13 +84,21 @@ def _lsd_sort_bits(ukeys, vals, d: int, k: int, engine: str, kpb: int,
 
 def lsd_sort(keys: jnp.ndarray, values: Any = None, d: int = 5,
              engine: Optional[str] = None, kpb: int = 1024,
-             step_batch: int = 8, interpret: Optional[bool] = None):
+             step_batch: int = 8, interpret: Optional[bool] = None,
+             adaptive: bool = True, return_passes: bool = False):
     """Stable LSD radix sort with ``d``-bit digits (default 5 — the CUB proxy).
 
     ``engine`` is resolved like ``hybrid_sort``'s (``argsort``/``scan``/
     ``kernel``/``auto``); ``kpb`` is the kernel engine's keys-per-block and
     ``step_batch`` its descriptor rows per fused-launch grid step
     (``plan.pack_region_blocks``).
+
+    ``adaptive`` narrows the pass schedule to the statically live bit window
+    of concrete keys (⌈k_eff/d⌉ passes); traced keys always get the full
+    ⌈k/d⌉ schedule.  Bits outside the window are globally constant, so the
+    elided passes were identity permutations — output and stability are
+    unchanged.  ``return_passes`` appends the executed pass count (a Python
+    int) to the return value.
     """
     if keys.ndim != 1:
         raise ValueError("lsd_sort expects a 1-D key array")
@@ -95,10 +108,21 @@ def lsd_sort(keys: jnp.ndarray, values: Any = None, d: int = 5,
     engine = plan.resolve_pass_engine(engine, interpret)
     k = bijection.key_bits(keys.dtype)
     if keys.shape[0] == 0:
-        return keys if values is None else (keys, values)
+        out = keys if values is None else (keys, values)
+        if return_passes:
+            return (*((out,) if values is None else out), 0)
+        return out
+    lo, hi = 0, k
+    if adaptive and not isinstance(keys, jax.core.Tracer):
+        lo, hi = hybrid.live_bit_window(bijection.to_ordered_bits_np(
+            np.asarray(keys)))
     ukeys = bijection.to_ordered_bits(keys)
     vals = values if values is not None else ()
-    ukeys, vals = _lsd_sort_bits(ukeys, vals, d, k, engine, kpb, step_batch,
-                                 interpret)
+    ukeys, vals = _lsd_sort_bits(ukeys, vals, d, hi, engine, kpb, step_batch,
+                                 interpret, lo=lo)
     out = bijection.from_ordered_bits(ukeys, keys.dtype)
-    return out if values is None else (out, vals)
+    result = out if values is None else (out, vals)
+    if return_passes:
+        passes = model.num_digits(max(hi - lo, 0), d)
+        return (*((result,) if values is None else result), passes)
+    return result

@@ -21,6 +21,9 @@ class SortConfig:
     rank_engine: str = "auto"  # pass engine default (see core.ranks.resolve_engine)
     step_batch: int = 8        # descriptor rows per fused-launch grid step
                                # (plan.pack_region_blocks super-step width)
+    adaptive: bool = True      # entropy-adaptive schedule: narrow the digit
+                               # window to the live bits of concrete inputs
+                               # and elide single-digit passes mid-sort
 
     def __post_init__(self):
         if not (0 < self.d <= 16):

@@ -170,6 +170,10 @@ class OocStats(NamedTuple):
     checksum_failures: int = 0  # host-buffer corruptions detected
     rounds_checkpointed: int = 0  # merge rounds published to the store
     retry_link_bytes: int = 0   # extra link bytes of failed/aborted attempts
+    chunk_passes_executed: int = 0  # counting passes the chunk sorts ran
+                                    # (entropy-adaptive: <= nominal ⌈k/d⌉
+                                    # per chunk; 0 on resumed runs — the
+                                    # chunk phase ran in another process)
 
 
 class _DeviceLedger:
@@ -291,14 +295,19 @@ def _chunk_nbytes(chunk) -> int:
 
 @functools.partial(jax.jit, static_argnames=("cfg", "engine", "interpret"))
 def _sort_chunk(keys, leaves, cfg, engine, interpret):
-    """Sort one staged chunk; emit the run as order-preserving unsigned bits."""
+    """Sort one staged chunk; emit the run as order-preserving unsigned bits.
+
+    The trailing element is the executed counting-pass count of the chunk
+    sort (entropy-adaptive schedules execute <= the nominal ⌈k/d⌉).
+    """
     if leaves:
-        sk, sv = hybrid_sort(keys, leaves, cfg=cfg, engine=engine,
-                             interpret=interpret)
+        sk, sv, st = hybrid_sort(keys, leaves, cfg=cfg, engine=engine,
+                                 interpret=interpret, return_stats=True)
     else:
-        sk = hybrid_sort(keys, cfg=cfg, engine=engine, interpret=interpret)
+        sk, st = hybrid_sort(keys, cfg=cfg, engine=engine,
+                             interpret=interpret, return_stats=True)
         sv = ()
-    return bijection.to_ordered_bits(sk), sv
+    return bijection.to_ordered_bits(sk), sv, st.counting_passes
 
 
 @functools.partial(jax.jit, static_argnames=("lens", "kway", "tile", "n",
@@ -430,8 +439,9 @@ def _chunk_phase(chunks, *, spill, cfg, engine, interpret, key_dtype,
     sort through ``sort_launch``, and (spill regime) every run download
     through ``run_download``.  ``acct`` accumulates the phase's clean link
     bytes so an aborted attempt can fold them into the retry ledger.
-    Returns the runs: device-resident ``(keys, leaves)`` pairs, or host
-    numpy pairs in the spill regime.
+    Returns ``(runs, passes)``: the runs — device-resident ``(keys,
+    leaves)`` pairs, or host numpy pairs in the spill regime — plus the
+    per-chunk executed counting-pass counts (device scalars).
     """
     num_chunks = len(chunks)
 
@@ -464,6 +474,7 @@ def _chunk_phase(chunks, *, spill, cfg, engine, interpret, key_dtype,
     staged_bytes = _chunk_nbytes(chunks[0])
     staged = upload(chunks[0], staged_bytes)
     runs = []
+    passes = []
     pending = None     # spill: (device run, run bytes, working bytes) to D2H
     for i in range(num_chunks):
         nxt = nxt_bytes = None
@@ -476,6 +487,8 @@ def _chunk_phase(chunks, *, spill, cfg, engine, interpret, key_dtype,
         run = guarded("sort_launch", _sort_chunk, *staged, cfg, engine,
                       interpret, policy=faults, retry=retry,
                       ledger=faultlog)                   # ... sort i
+        passes.append(run[2])
+        run = run[:2]
         ledger.alloc(staged_bytes)                       # the sorted run
         if spill:
             if pending is not None:                      # ... download run i-1
@@ -487,7 +500,7 @@ def _chunk_phase(chunks, *, spill, cfg, engine, interpret, key_dtype,
         staged, staged_bytes = nxt, nxt_bytes
     if spill:
         runs.append(land(pending))
-    return runs
+    return runs, passes
 
 
 # --------------------- host-spill streaming merge ---------------------------
@@ -715,7 +728,8 @@ def oocsort(reader, chunk_elems: int, values: Any = None,
             checkpoint_dir: Optional[str] = None,
             checkpoint_every: int = 1,
             resume_from: Optional[str] = None,
-            values_like: Any = None):
+            values_like: Any = None,
+            compress: bool = False):
     """Sort a host-resident array (or chunk stream) larger than one device run.
 
     ``reader`` is a 1-D numpy array, an iterable of 1-D key chunks (all of
@@ -755,6 +769,15 @@ def oocsort(reader, chunk_elems: int, values: Any = None,
     ``values_like`` (a structure prototype) to get the value pytree back in
     its original shape; otherwise a single value leaf is returned bare and
     multiple leaves as a tuple.
+
+    ``compress=True`` packs the keys' live bits into the smallest unsigned
+    carrier **host-side** before anything touches the device (bit positions
+    constant across the whole input contribute no ordering information;
+    ``core.bijection.CompressionPlan``).  Every downstream byte count —
+    chunk uploads, sort ping-pong, merge slabs, spill budgets, checkpoint
+    manifests — then moves b_eff-sized keys, and uint64 inputs with <= 32
+    live bits sort without ``jax_enable_x64``.  The output is decoded back
+    to the original dtype and is byte-identical to the uncompressed sort.
 
     Returns host numpy arrays: ``sorted_keys``, or ``(sorted_keys,
     permuted_values)`` when values were given; append an :class:`OocStats`
@@ -807,6 +830,36 @@ def oocsort(reader, chunk_elems: int, values: Any = None,
     if key_dtype is None:
         raise ValueError("empty iterator reader: yield at least one "
                          "(possibly empty) chunk to fix the dtype")
+
+    # --- compressed-key mode: pack live bits host-side ---------------------
+    # The global OR/AND reduce over the ordered bits of every chunk finds the
+    # bit positions that vary anywhere in the input; packing them out is
+    # order-preserving (two distinct keys first differ at a live bit), so the
+    # whole pipeline sorts/merges the packed carrier and only the two decode
+    # sites below see the original dtype again.  Done before the spill plan
+    # so elem_bytes, slab sizing and the chunk clamp all model packed keys.
+    orig_key_dtype = key_dtype
+    cplan = None
+    if compress and chunks:
+        bits = bijection.key_bits(key_dtype)
+        orv, andv = 0, (1 << bits) - 1
+        for ckeys, _ in chunks:
+            ub = bijection.to_ordered_bits_np(ckeys)
+            if ub.size:
+                orv |= int(np.bitwise_or.reduce(ub))
+                andv &= int(np.bitwise_and.reduce(ub))
+        mask = orv ^ andv
+        cplan = bijection.CompressionPlan(mask=mask, dead=andv & ~mask,
+                                          source_bits=bits)
+        chunks = [(bijection.pack_ordered_bits_np(
+                       bijection.to_ordered_bits_np(ckeys), cplan), vs)
+                  for ckeys, vs in chunks]
+        key_dtype = np.dtype(bijection.packed_carrier_dtype(cplan))
+
+    def decode_np(ubits):
+        if cplan is not None:
+            ubits = bijection.unpack_ordered_bits_np(ubits, cplan)
+        return bijection.from_ordered_bits_np(ubits, orig_key_dtype)
 
     # --- spill plan: slab capacity + chunk clamp from the device budget ----
     # (validated before the empty-input return so a misconfigured slab or
@@ -883,6 +936,11 @@ def oocsort(reader, chunk_elems: int, values: Any = None,
     meta_base = {"key_dtype": np.dtype(key_dtype).str, "n": n,
                  "num_leaves": len(empty_leaves),
                  "value_dtypes": [v.dtype.str for v in empty_leaves]}
+    if cplan is not None:
+        # manifest runs hold PACKED bits; record the plan so resume decodes
+        meta_base["compress"] = {"mask": cplan.mask, "dead": cplan.dead,
+                                 "source_bits": cplan.source_bits,
+                                 "orig_dtype": np.dtype(orig_key_dtype).str}
 
     # --- attempt loop: the degradation ladder's restart point --------------
     # Each attempt runs the chunk phase and the merge phase under the current
@@ -913,7 +971,7 @@ def oocsort(reader, chunk_elems: int, values: Any = None,
 
         # --- chunk phase: double-buffered staging --------------------------
         try:
-            runs = _chunk_phase(
+            runs, cpasses = _chunk_phase(
                 chunks, spill=spill, cfg=cfg, engine=engine,
                 interpret=interpret, key_dtype=key_dtype,
                 elem_bytes=elem_bytes, ledger=ledger, faults=faults,
@@ -953,7 +1011,7 @@ def oocsort(reader, chunk_elems: int, values: Any = None,
                 if not _rechunk_smaller():
                     raise esc.cause
                 continue
-            keys_np = bijection.from_ordered_bits_np(keys_h, key_dtype)
+            keys_np = decode_np(keys_h)
             leaves_np = tuple(vals_h)
         else:
             try:
@@ -1002,15 +1060,19 @@ def oocsort(reader, chunk_elems: int, values: Any = None,
                         rounds += 1
 
                 def gather():
-                    kn = np.asarray(
-                        bijection.from_ordered_bits(ck[:n], key_dtype))
+                    if cplan is None:
+                        kn = np.asarray(
+                            bijection.from_ordered_bits(ck[:n], key_dtype))
+                    else:
+                        kn = decode_np(np.asarray(ck[:n]))
                     return kn, tuple(np.asarray(v[:n]) for v in cv)
 
                 keys_np, leaves_np = guarded(
                     "run_download", gather, policy=faults, retry=retry,
                     ledger=faultlog, cost_bytes=n * elem_bytes,
                     direction="d2h")
-                acct["down"] += keys_np.nbytes + \
+                # the link carried the PACKED carrier; decode is host-side
+                acct["down"] += n * np.dtype(key_dtype).itemsize + \
                     sum(v.nbytes for v in leaves_np)
                 chunk_down = acct["down"]
             except RetriesExhausted:
@@ -1040,7 +1102,8 @@ def oocsort(reader, chunk_elems: int, values: Any = None,
         degradations=faultlog.degradations,
         checksum_failures=faultlog.checksum_failures,
         rounds_checkpointed=faultlog.rounds_checkpointed,
-        retry_link_bytes=faultlog.retry_link_bytes)
+        retry_link_bytes=faultlog.retry_link_bytes,
+        chunk_passes_executed=sum(int(p) for p in cpasses))
     return finish(keys_np, leaves_np, stats)
 
 
@@ -1058,7 +1121,15 @@ def _resume(resume_from: str, *, spill_budget_bytes, interpret, faults,
     """
     meta, keys_h, vals_h = _load_round_checkpoint(resume_from)
     kway, tile, slab = meta["kway"], meta["tile"], meta["slab"]
-    key_dtype = np.dtype(meta["key_dtype"])
+    key_dtype = np.dtype(meta["key_dtype"])    # packed carrier if compressed
+    comp = meta.get("compress")
+    cplan = None
+    out_dtype = key_dtype
+    if comp is not None:
+        cplan = bijection.CompressionPlan(mask=int(comp["mask"]),
+                                          dead=int(comp["dead"]),
+                                          source_bits=int(comp["source_bits"]))
+        out_dtype = np.dtype(comp["orig_dtype"])
     n = meta["n"]
     elem_bytes = key_dtype.itemsize + \
         sum(np.dtype(d).itemsize for d in meta["value_dtypes"])
@@ -1083,13 +1154,16 @@ def _resume(resume_from: str, *, spill_budget_bytes, interpret, faults,
             checkpoint_every=checkpoint_every,
             meta_base={k: meta[k] for k in
                        ("key_dtype", "n", "num_leaves", "value_dtypes",
-                        "num_chunks", "chunk_elems")},
+                        "num_chunks", "chunk_elems", "compress")
+                       if k in meta},
             checksums=[tuple(cs) for cs in meta["checksums"]],
             save_incoming=not same_dir)
     except _RechunkEscalation as esc:
         raise esc.cause      # no host chunks to re-split in a resumed run
 
-    keys_np = bijection.from_ordered_bits_np(keys_h0, key_dtype)
+    if cplan is not None:
+        keys_h0 = bijection.unpack_ordered_bits_np(keys_h0, cplan)
+    keys_np = bijection.from_ordered_bits_np(keys_h0, out_dtype)
     leaves_np = tuple(vals_h0)
     nl = meta["num_leaves"]
     if nl == 0:

@@ -81,39 +81,57 @@ def resolve_pass_engine(engine, interpret: bool) -> str:
     return engine
 
 
-def digit_at(ukeys: jnp.ndarray, pass_idx, k: int, d: int) -> jnp.ndarray:
-    """MSD digit for pass ``pass_idx`` (0 = most significant); handles k % d != 0."""
+def digit_at(ukeys: jnp.ndarray, pass_idx, k: int, d: int,
+             lo: int = 0) -> jnp.ndarray:
+    """MSD digit for pass ``pass_idx`` (0 = most significant); handles k % d != 0.
+
+    ``lo`` is the static live-bit floor of the entropy-adaptive schedule:
+    pass windows count down from ``k`` but never extend below ``lo`` (bits
+    under the floor are globally dead and carry no ordering information).
+    """
     udt = ukeys.dtype
     hi = k - pass_idx * d
-    width = jnp.minimum(d, hi)
-    lo = (hi - width).astype(udt)
+    width = jnp.clip(jnp.minimum(d, hi - lo), 0, d)
+    wlo = (hi - width).astype(udt)
     mask = ((jnp.array(1, udt) << width.astype(udt)) - 1).astype(udt)
-    return ((ukeys >> lo) & mask).astype(jnp.int32)
+    return ((ukeys >> wlo) & mask).astype(jnp.int32)
 
 
-def digit_window(pass_idx, k: int, d: int) -> jnp.ndarray:
-    """(4,) int32 [lo, width, next_lo, next_width] MSD windows of a pass.
+def digit_window(pass_idx, k: int, d: int, lo: int = 0) -> jnp.ndarray:
+    """(6,) int32 [lo, width, next_lo, next_width, next2_lo, next2_width]
+    MSD windows of a pass.
 
     The first pair locates this pass's digit, the second the next pass's —
-    the window the fused kernel histograms during the scatter (§4.3).  A
-    ``next_width`` of 0 marks the final pass (no fused histogram).
+    the window the fused kernel histograms during the scatter (§4.3) — and
+    the third the pass after that, the *lookahead* window the adaptive
+    schedule histograms alongside so an elided pass p+1 still leaves pass
+    p+2's histogram in hand.  A width of 0 marks a window past the last
+    pass (no fused histogram).  ``lo`` is the static live-bit floor: all
+    windows clip against it, so a narrowed schedule runs ⌈(k - lo)/d⌉
+    passes without touching the dead low bits.
     """
     hi = k - pass_idx * d
-    width = jnp.minimum(d, hi)
-    lo = hi - width
-    nhi = hi - width
-    nwidth = jnp.clip(jnp.minimum(d, nhi), 0, d)
-    nlo = jnp.maximum(nhi - nwidth, 0)
-    return jnp.stack([lo, width, nlo, nwidth]).astype(jnp.int32)
+    width = jnp.clip(jnp.minimum(d, hi - lo), 0, d)
+    wlo = hi - width
+    nwidth = jnp.clip(jnp.minimum(d, wlo - lo), 0, d)
+    nlo = wlo - nwidth
+    n2width = jnp.clip(jnp.minimum(d, nlo - lo), 0, d)
+    n2lo = nlo - n2width
+    return jnp.stack([wlo, width, nlo, nwidth, n2lo, n2width]).astype(jnp.int32)
 
 
-def lsd_digit_window(pass_idx: int, k: int, d: int) -> jnp.ndarray:
-    """(4,) int32 LSD windows: pass p covers bits [p*d, min((p+1)*d, k))."""
-    lo = pass_idx * d
-    width = min(d, k - lo)
-    nlo = lo + width
+def lsd_digit_window(pass_idx: int, k: int, d: int, lo: int = 0) -> jnp.ndarray:
+    """(6,) int32 LSD windows: pass p covers bits [lo + p*d, min(lo+(p+1)*d, k)).
+
+    ``lo``/``k`` bound the live window of the adaptive schedule (static
+    narrowing); the lookahead slots are 0 — the LSD driver unrolls its
+    passes statically and never elides mid-sort.
+    """
+    wlo = lo + pass_idx * d
+    width = min(d, k - wlo)
+    nlo = wlo + width
     nwidth = max(0, min(d, k - nlo))
-    return jnp.asarray([lo, width, nlo, nwidth], jnp.int32)
+    return jnp.asarray([wlo, width, nlo, nwidth, 0, 0], jnp.int32)
 
 
 def active_segments(seg_id: jnp.ndarray, done: jnp.ndarray,
@@ -333,7 +351,7 @@ def single_pass_partition(ids: jnp.ndarray, num_buckets: int,
                                 jnp.full((1,), m, jnp.int32), m, kpb,
                                 max_region_blocks(m, kpb, 1),
                                 batch=step_batch)
-    sc = jnp.asarray([0, width, 0, 0], jnp.int32)
+    sc = jnp.asarray([0, width, 0, 0, 0, 0], jnp.int32)
     nsid = jnp.zeros((r,), jnp.int32)
     _, (perm_pad,), _ = fused.fused_counting_pass(
         ck, cv, ak, av, sc, *blocks, base_excl, nsid,

@@ -35,6 +35,23 @@ reduction, and the whole sort pays exactly one extra 1R prologue sweep
 traffic headline.  Bookkeeping arrays (M2–M5 of §4.5) are O(n/∂̂ · r) and do
 not change the leading term.
 
+Entropy-adaptive row (``core.hybrid`` adaptive schedule + ``core.bijection``
+compressed keys): only *executed* passes move bytes — statically dead bits
+shrink the nominal schedule to ⌈k_eff/d⌉ over the live window, the fused
+launch's free next-pass histogram elides single-occupied-digit passes with
+no launch at all, and opt-in key compression shrinks b itself to the packed
+carrier b_eff (uint64 → uint32 when ≤ 32 bits are live).  The adaptive
+bound is therefore
+
+    ``(2·p_exec + 1)·n·b_eff``  key bytes,  ``p_exec ≤ ⌈k_eff/d⌉ ≤ ⌈k/d⌉``
+
+with equality on full-entropy keys (zero overhead: the skip predicate reads
+the histogram the fused pass already produced) and p_exec → 1 on clustered
+/ shared-prefix keys.  Executed-vs-nominal counts are census-gated (one
+``pallas_call`` per *executed* pass — elided passes launch nothing;
+tests/test_adaptive.py) and reported per entropy rung by the
+``entropy/...`` rows of BENCH_hybrid.json and ``SortStats.elided_passes``.
+
 Out-of-core transfer accounting (§5, the BENCH_ooc.json roofline row): for
 N keys in C = ⌈N/chunk⌉ device-sized chunks merged K ways per round, per
 key of b bytes (values: v bytes):
@@ -54,7 +71,11 @@ key of b bytes (values: v bytes):
 Device-resident regime (rows 1–4 + gather): every key crosses the host link
 exactly twice regardless of C (the §5 pipeline hides the upload behind the
 previous chunk's sort), and each merge round reads and writes the whole run
-buffer once — one ``pallas_call`` per round, ⌈log_K C⌉ rounds.  Host-spill
+buffer once — one ``pallas_call`` per round, ⌈log_K C⌉ rounds.  The chunk
+sorts inherit the adaptive bound above (⌈k/d⌉ → p_exec per chunk, totalled
+in ``OocStats.chunk_passes_executed``), and ``oocsort(compress=True)``
+replaces b with the packed carrier b_eff in EVERY row — link bytes, slab
+sizing and spill budgets included — before any key crosses the link.  Host-spill
 regime (``oocsort(spill_budget_bytes=...)``): run marshalling and the flat
 merge buffers disappear — runs live host-side between rounds, every spilled
 round streams each multi-run group through fixed device slabs (strip i+1's

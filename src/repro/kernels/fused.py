@@ -128,7 +128,7 @@ def initial_histogram(buf_keys: jnp.ndarray, n: int, lo: int, width: int,
 
 def _fused_pass_kernel(sc_ref, seg_ref, off_ref, reset_ref, cnt_ref, act_ref,
                        *refs, kpb: int, r: int, a_max: int, n: int,
-                       num_vals: int, batch: int):
+                       num_vals: int, batch: int, lookahead: bool):
     """One grid step = one packed super-step of ``batch`` descriptor rows
     (see module docstring)."""
     srck_ref = refs[0]
@@ -140,7 +140,11 @@ def _fused_pass_kernel(sc_ref, seg_ref, off_ref, reset_ref, cnt_ref, act_ref,
     dstk_ref = refs[4 + 2 * num_vals]
     dstv_refs = refs[5 + 2 * num_vals:5 + 3 * num_vals]
     hist_ref = refs[5 + 3 * num_vals]
-    carry_ref = refs[6 + 3 * num_vals]
+    if lookahead:
+        hist2_ref = refs[6 + 3 * num_vals]
+        carry_ref = refs[7 + 3 * num_vals]
+    else:
+        carry_ref = refs[6 + 3 * num_vals]
 
     g = pl.program_id(0)
 
@@ -148,6 +152,8 @@ def _fused_pass_kernel(sc_ref, seg_ref, off_ref, reset_ref, cnt_ref, act_ref,
     def _init():
         hist_ref[...] = jnp.zeros_like(hist_ref)
         carry_ref[...] = jnp.zeros_like(carry_ref)
+        if lookahead:
+            hist2_ref[...] = jnp.zeros_like(hist2_ref)
 
     kdt = srck_ref.dtype
     one = jnp.ones((), kdt)
@@ -217,13 +223,28 @@ def _fused_pass_kernel(sc_ref, seg_ref, off_ref, reset_ref, cnt_ref, act_ref,
     h = hist_ref[...]
     hist_ref[...] = h.at[flat].add(live.reshape(-1).astype(jnp.int32))
 
+    if lookahead:
+        # adaptive lookahead (§4.3 extended): also histogram the window of
+        # pass i+2, keyed by the SAME next-pass segment id.  The table is
+        # exactly the i+2 histogram whenever pass i+1 is elided: an elidable
+        # pass has one occupied digit per active segment, so its bookkeeping
+        # maps each segment 1:1 onto the same compact id and moves no keys.
+        n2lo = sc_ref[4].astype(kdt)
+        n2width = sc_ref[5].astype(kdt)
+        ndig2 = ((keys >> n2lo) & ((one << n2width) - one)).astype(jnp.int32)
+        live2 = (lv & (act[:, None] == 1) & (sid < a_max) & (sc_ref[5] > 0))
+        flat2 = jnp.where(live2, sid * r + ndig2, 0).reshape(-1)
+        h2 = hist2_ref[...]
+        hist2_ref[...] = h2.at[flat2].add(live2.reshape(-1).astype(jnp.int32))
+
 
 @functools.partial(jax.jit, static_argnames=("kpb", "r", "a_max", "n",
-                                             "interpret"))
+                                             "interpret", "lookahead"))
 def fused_counting_pass(src_keys, src_vals, alt_keys, alt_vals, pass_scalars,
                         blk_seg, blk_off, blk_reset, blk_count, blk_active,
                         base_excl, next_sid, *, kpb: int, r: int, a_max: int,
-                        n: int, interpret: bool = True):
+                        n: int, interpret: bool = True,
+                        lookahead: bool = False):
     """One full counting pass over all active buckets in ONE Pallas launch.
 
     Arguments:
@@ -233,8 +254,12 @@ def fused_counting_pass(src_keys, src_vals, alt_keys, alt_vals, pass_scalars,
       alt_keys / alt_vals     — alternate buffers, donated to the outputs via
                                 ``input_output_aliases`` (§4.4 in-place
                                 replacement),
-      pass_scalars            — (4,) int32 [lo, width, next_lo, next_width]
-                                digit windows (``plan.digit_window``),
+      pass_scalars            — int32 [lo, width, next_lo, next_width] digit
+                                windows (``plan.digit_window``); with
+                                ``lookahead`` two extra slots
+                                [next2_lo, next2_width] locate the pass-i+2
+                                window the adaptive schedule histograms
+                                alongside,
       blk_*                   — int32 block descriptor tables
                                 (``plan.make_region_blocks``): compact segment
                                 index (a_max = copy-through), key offset,
@@ -253,8 +278,13 @@ def fused_counting_pass(src_keys, src_vals, alt_keys, alt_vals, pass_scalars,
     Returns ``(new_keys, new_vals, hist_next)`` where ``hist_next`` is the
     (a_max * r,) fused histogram of the NEXT pass's digit (reshape to
     (a_max, r)); row j matches the j-th next-pass active segment in position
-    order.  Exactly one ``pallas_call`` in the trace — the property the
-    launch-counter regression test pins down.
+    order.  With ``lookahead=True`` the return gains a fourth element
+    ``hist_next2`` — the pass-i+2 window histogrammed under the same
+    next-pass segment keys, which is exactly pass i+2's histogram whenever
+    pass i+1 is elided (single occupied digit per segment => identity
+    scatter and a 1:1 segment map).  Exactly one ``pallas_call`` in the
+    trace either way — the property the launch-counter regression test pins
+    down.
     """
     if blk_seg.ndim == 1:                    # flat rows = B=1 super-steps
         blk_seg, blk_off, blk_reset, blk_count, blk_active = (
@@ -265,16 +295,17 @@ def fused_counting_pass(src_keys, src_vals, alt_keys, alt_vals, pass_scalars,
     n_pad = src_keys.shape[0]
 
     whole = lambda x: pl.BlockSpec(x.shape, lambda i, *_: (0,) * x.ndim)
+    hists = 2 if lookahead else 1
     in_specs = ([whole(src_keys)] + [whole(v) for v in src_vals] +
                 [whole(alt_keys)] + [whole(v) for v in alt_vals] +
                 [whole(base_excl), whole(next_sid)])
     out_specs = ([whole(src_keys)] + [whole(v) for v in src_vals] +
-                 [pl.BlockSpec((a_max * r,), lambda i, *_: (0,)),
-                  pl.BlockSpec((r,), lambda i, *_: (0,))])
+                 [pl.BlockSpec((a_max * r,), lambda i, *_: (0,))] * hists +
+                 [pl.BlockSpec((r,), lambda i, *_: (0,))])
     out_shape = ([jax.ShapeDtypeStruct((n_pad,), src_keys.dtype)] +
                  [jax.ShapeDtypeStruct(v.shape, v.dtype) for v in src_vals] +
-                 [jax.ShapeDtypeStruct((a_max * r,), jnp.int32),
-                  jax.ShapeDtypeStruct((r,), jnp.int32)])
+                 [jax.ShapeDtypeStruct((a_max * r,), jnp.int32)] * hists +
+                 [jax.ShapeDtypeStruct((r,), jnp.int32)])
     # operand index space includes the 6 scalar-prefetch args; the alternate
     # buffers (inputs 6+1+num_vals ...) donate their memory to the outputs
     alt0 = 6 + 1 + num_vals
@@ -282,7 +313,8 @@ def fused_counting_pass(src_keys, src_vals, alt_keys, alt_vals, pass_scalars,
 
     out = pl.pallas_call(
         functools.partial(_fused_pass_kernel, kpb=kpb, r=r, a_max=a_max,
-                          n=n, num_vals=num_vals, batch=batch),
+                          n=n, num_vals=num_vals, batch=batch,
+                          lookahead=lookahead),
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=6,
             grid=(g_steps,),
@@ -298,4 +330,6 @@ def fused_counting_pass(src_keys, src_vals, alt_keys, alt_vals, pass_scalars,
     new_keys = out[0]
     new_vals = tuple(out[1:1 + num_vals])
     hist_next = out[1 + num_vals]
+    if lookahead:
+        return new_keys, new_vals, hist_next, out[2 + num_vals]
     return new_keys, new_vals, hist_next

@@ -84,8 +84,16 @@ def test_hybrid_entropy_sweep(rng, ands):
 
 
 def test_hybrid_constant_runs_all_passes(rng):
+    # zero-entropy keys: the adaptive schedule sees no live bits and plans
+    # ZERO passes; with adaptive=False the 32/8 worst case runs all 4.
     x = np.full(5000, 0xDEADBEEF, dtype=np.uint32)
     out, stats = hybrid_sort(jnp.asarray(x), cfg=TCFG, return_stats=True)
+    assert np.array_equal(x, np.asarray(out))
+    assert int(stats.counting_passes) == 0
+    assert int(stats.elided_passes) == 0
+    assert not bool(stats.used_local_sort)
+    out, stats = hybrid_sort(jnp.asarray(x), cfg=TCFG, return_stats=True,
+                             adaptive=False)
     assert np.array_equal(x, np.asarray(out))
     assert int(stats.counting_passes) == 4          # 32/8: zero-entropy worst case
     assert not bool(stats.used_local_sort)

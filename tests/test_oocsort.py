@@ -504,3 +504,73 @@ def test_merge_round_single_launch_with_values():
     jx = jax.make_jaxpr(f)(ck, ak)
     assert hlo.pallas_launch_count(jx) == 1
     assert hlo.launch_census(jx)["total"] == 1
+
+
+# ---------------------------------------------------------------------------
+# compressed-key mode (entropy-adaptive): pack to the live-bit carrier BEFORE
+# any key crosses the link, so every link/slab/budget row shrinks with b_eff
+# ---------------------------------------------------------------------------
+
+
+def test_oocsort_compress_spill_clustered_smoke():
+    """Clustered keys + ``compress=True`` through the host-spill regime.
+
+    Live bits {0..5, 12..13} pack 4-byte keys into a uint8 carrier, so every
+    link crossing (chunk staging, both spill rounds) pays 1 byte/key instead
+    of 4 — and the chunk sorts run the 1-pass packed schedule instead of the
+    2-pass narrowed (4-pass nominal) uint32 one.  The skewed cluster (56 of
+    every 64 keys share the top digit) keeps a >local_threshold bucket alive
+    after pass 0 of the UNcompressed sort, so the executed-pass reduction is
+    strict, and the packed max value 0xFF doubles as a sentinel-collision
+    probe.
+    """
+    rng = np.random.default_rng(11)
+    n = 16 * 64
+    c = np.where(np.arange(n) % 8 != 0, 0,
+                 rng.integers(1, 4, n)).astype(np.uint32)
+    x = (c << np.uint32(12)) | rng.integers(0, 64, n).astype(np.uint32)
+    kw = dict(engine="argsort", cfg=TCFG, kway=4, tile=8,
+              device_slab_elems=32, return_stats=True)
+    plain, st_p = oocsort(x, 64, **kw)
+    out, st = oocsort(x, 64, compress=True, **kw)
+
+    assert out.dtype == np.uint32
+    assert out.tobytes() == plain.tobytes() == np.sort(x).tobytes()
+
+    # link formulas stay exact on the PACKED carrier byte size (b_eff = 1)
+    for s, b in ((st_p, 4), (st, 1)):
+        assert s.rounds_spilled == 2
+        assert s.chunk_link_bytes == 2 * n * b
+        assert s.spill_link_bytes == 2 * n * b * s.rounds_spilled
+        assert s.retry_link_bytes == 0
+        assert s.h2d_bytes + s.d2h_bytes == \
+            s.chunk_link_bytes + s.spill_link_bytes + s.retry_link_bytes
+
+    # chunk sorts report the reduced executed-pass totals: packed 8-bit keys
+    # need 1 pass/chunk, the uncompressed narrowed window 2, nominal ⌈32/8⌉=4
+    assert st.num_chunks == st_p.num_chunks == 16
+    assert st.chunk_passes_executed == st.num_chunks
+    assert st.chunk_passes_executed < st_p.chunk_passes_executed
+    assert st_p.chunk_passes_executed < st_p.num_chunks * 4
+
+
+def test_oocsort_compress_uint64_without_x64():
+    """≤32 live bits let uint64 keys sort WITHOUT jax_enable_x64: the host
+    packs to a uint32 carrier before the device ever sees a key (plain
+    uint64 still refuses), and the link rows price the 4-byte carrier."""
+    if jax.config.jax_enable_x64:
+        pytest.skip("guard only meaningful with x64 disabled")
+    rng = np.random.default_rng(7)
+    n = 512
+    x = ((rng.integers(0, 1 << 20, n).astype(np.uint64) << np.uint64(8))
+         | np.uint64(0xA5 << 40))
+    with pytest.raises(RuntimeError, match="x64"):
+        oocsort(x, 128, engine="argsort")
+    out, st = oocsort(x, 128, engine="argsort", cfg=TCFG, return_stats=True,
+                      compress=True)
+    assert out.dtype == np.uint64
+    assert out.tobytes() == np.sort(x).tobytes()
+    assert st.chunk_link_bytes == 2 * n * 4   # 20 live bits -> uint32 carrier
+    # executed passes stay under the PACKED nominal ⌈20/8⌉ = 3 per chunk —
+    # far below the ⌈64/8⌉ = 8 the uncompressed uint64 schedule would run
+    assert 0 < st.chunk_passes_executed <= st.num_chunks * 3
