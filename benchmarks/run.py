@@ -20,6 +20,12 @@ device slabs vs device-resident merge vs one-shot argsort).  ``--faults``
 adds the resilience-overhead rows (plain vs checksummed+checkpointed vs
 injected-fault spill runs, gated ≤ 1.15x on the fault-free path).
 
+``--dist`` adds the distributed-exchange sweep (``benchmarks.dist``): the
+§5 shard exchange vs one-shot ``hybrid_sort`` per simulated device count
+(fake-device subprocesses); with ``--json PATH`` its rows land in
+``BENCH_dist.json`` next to PATH, devices × n × distribution with the same
+``ratios/...`` + ``ratio_convention`` + ``notes`` contract.
+
 ``--entropy`` adds the entropy-ladder sweep (``benchmarks.entropy``):
 adaptive vs static kernel-engine times plus executed-vs-nominal pass counts
 per Thearling rung, as ``entropy/...`` rows merged into the same
@@ -29,7 +35,7 @@ uniform).
 
 ``python -m benchmarks.run [--full] [--smoke] [--only fig6,...]
                            [--json [PATH]] [--entropy] [--ooc] [--spill]
-                           [--faults]``
+                           [--faults] [--dist]``
 """
 from __future__ import annotations
 
@@ -64,6 +70,9 @@ def main() -> None:
     ap.add_argument("--faults", action="store_true",
                     help="with --ooc: add the resilience-overhead rows "
                          "(checksums + checkpoints vs plain spill)")
+    ap.add_argument("--dist", action="store_true",
+                    help="also run the distributed-exchange device-scaling "
+                         "sweep (BENCH_dist.json)")
     args = ap.parse_args()
     if args.spill and not args.ooc:
         ap.error("--spill extends the out-of-core sweep: pass --ooc too")
@@ -121,6 +130,13 @@ def main() -> None:
         if args.json is not None:
             dump(rows, os.path.join(os.path.dirname(args.json) or ".",
                                     "BENCH_ooc.json"))
+
+    if args.dist:
+        from benchmarks import dist
+        rows = dist.main(fast=not args.full, smoke=args.smoke)
+        if args.json is not None:
+            dump(rows, os.path.join(os.path.dirname(args.json) or ".",
+                                    "BENCH_dist.json"))
 
 
 if __name__ == "__main__":

@@ -12,7 +12,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core.distributed import make_distributed_sort
+from repro.core.distributed import make_distributed_sort, valid_concat
 
 mesh = jax.make_mesh((8,), ("data",))
 rng = np.random.default_rng(0)
@@ -24,9 +24,21 @@ for name, ands, chunks in (("uniform s=1", 0, 1), ("skewed s=1", 3, 1),
     for _ in range(ands):
         x &= rng.integers(0, 2**32, n, dtype=np.uint32)
     fn = jax.jit(make_distributed_sort(mesh, "data", num_chunks=chunks))
-    out, valid, over = map(np.asarray, fn(jnp.asarray(x)))
-    per = out.reshape(8, -1)
-    got = np.concatenate([per[i][: valid[i]] for i in range(8)])
+    out, stats = fn(jnp.asarray(x))
+    got = valid_concat(out, stats.valid)
+    valid = np.asarray(stats.valid)
     ok = np.array_equal(np.sort(x), got)
-    print(f"{name:24s} n={n} ok={ok} overflow={bool(over.any())} "
-          f"shard fill={valid.mean()/per.shape[1]:.2f}")
+    print(f"{name:24s} n={n} ok={ok} "
+          f"attempts={int(np.asarray(stats.exchange_attempts)[0])} "
+          f"overflow={bool(np.asarray(stats.overflow).any())} "
+          f"shard fill={valid.mean() * 8 / np.asarray(out).shape[0]:.2f}")
+
+# payloads ride the exchange: sort (key, doc-id) pairs
+x = rng.integers(0, 2**32, n, dtype=np.uint32)
+ids = np.arange(n, dtype=np.int32)
+fn = jax.jit(make_distributed_sort(mesh, "data"))
+out, out_ids, stats = fn(jnp.asarray(x), jnp.asarray(ids))
+gk = valid_concat(out, stats.valid)
+gi = valid_concat(out_ids, stats.valid)
+print(f"{'kv pairs':24s} n={n} ok={np.array_equal(x[gi], gk)} "
+      f"perm ok={np.array_equal(np.sort(gi), ids)}")

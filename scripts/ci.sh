@@ -18,8 +18,15 @@
 #                          run per core.faults fault site with retries
 #                          enabled, asserting green + byte parity vs the
 #                          fault-free run (scripts/fault_matrix.py)
+#   scripts/ci.sh dist   — multi-device shard-exchange stage: the
+#                          dist-marked subprocess walls at 8 fake devices
+#                          (fast rung) and 16 fake devices (slow rung; the
+#                          XLA flag is exported so tests/_multidev.py widens
+#                          every wall), plus the BENCH_dist.json device-
+#                          scaling smoke
 #   scripts/ci.sh [full] — all stages back to back (the one-stop local
-#                          verify entry point)
+#                          verify entry point; dist runs as its own CI job
+#                          and is not repeated in full)
 #
 # Everything runs on a plain CPU host: the Pallas kernels execute in
 # interpret mode (the drivers default to it off-TPU), so the fused-engine
@@ -30,7 +37,7 @@ cd "$(dirname "$0")/.."
 
 STAGE="${1:-full}"
 if [[ "$STAGE" == "fast" || "$STAGE" == "slow" || "$STAGE" == "faults" \
-      || "$STAGE" == "full" ]]; then
+      || "$STAGE" == "dist" || "$STAGE" == "full" ]]; then
   if [[ $# -gt 0 ]]; then shift; fi
 else
   STAGE="full"
@@ -60,6 +67,30 @@ run_stage() {
 if [[ "$STAGE" == "faults" ]]; then
   echo "=== fault-matrix smoke (one resilient run per fault site) ==="
   python scripts/fault_matrix.py
+  exit 0
+fi
+
+if [[ "$STAGE" == "dist" ]]; then
+  # the exported flag only reaches the multi-device subprocesses
+  # (tests/_multidev.py reads it for the default width); in-process tests in
+  # the dist marker set would see fake devices, so the marker is reserved
+  # for subprocess walls (tests/conftest.py invariant)
+  echo "=== dist stage: multi-device walls at 8 devices (fast rung) ==="
+  XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+    run_stage -m "dist and not slow" "$@"
+  echo "=== dist stage: multi-device walls at 16 devices (slow rung) ==="
+  XLA_FLAGS="--xla_force_host_platform_device_count=16" \
+    run_stage -m "dist and slow" "$@"
+  echo "=== dist stage: device-scaling bench smoke (BENCH_dist.json) ==="
+  python -m benchmarks.dist --smoke
+  python - <<'EOF'
+import json
+rows = json.load(open("BENCH_dist.json"))
+for note in rows.get("notes", []):
+    print("WARNING [BENCH_dist.json]:", note)
+print("BENCH_dist.json rows:",
+      sum(1 for k in rows if k not in ("notes", "ratio_convention")))
+EOF
   exit 0
 fi
 

@@ -6,7 +6,12 @@ Public API:
   SortConfig         — tuning knobs (Table 3 defaults)
   counting_partition — single counting-sort pass (MoE dispatch building block)
   segmented_sort     — batched independent sorts
-  distributed_sort   — §5: multi-chip pipelined sort (shard_map)
+  make_distributed_sort — §5: multi-chip pipelined sort (shard_map; sample-
+                       sort shard exchange with KV payloads and bounded
+                       splitter-refinement retries on capacity overflow)
+  DistStats          — per-shard exchange ledger (attempts, residual
+                       overflow, valid prefix length, peak received load)
+  valid_concat       — host helper: shard outputs -> global sorted sequence
   oocsort            — §5: out-of-core pipelined sort (chunked device runs
                        under double-buffered staging + streaming k-way
                        merge; spill_budget_bytes bounds device memory by
@@ -17,6 +22,8 @@ Public API:
   FaultPolicy        — deterministic seed-driven fault injection for oocsort
   RetryPolicy        — bounded retries with capped backoff, ledger-tracked
 """
+from repro.core.distributed import (DistStats, make_distributed_sort,
+                                    valid_concat)
 from repro.core.bijection import (to_ordered_bits, from_ordered_bits,
                                   from_ordered_bits_np, to_ordered_bits_np,
                                   key_bits)
@@ -36,6 +43,7 @@ __all__ = [
     "to_ordered_bits", "from_ordered_bits", "from_ordered_bits_np",
     "to_ordered_bits_np", "key_bits",
     "oocsort", "OocStats",
+    "make_distributed_sort", "DistStats", "valid_concat",
     "FAULT_SITES", "FaultPolicy", "RetryPolicy", "FatalFault",
     "ChecksumError", "RetriesExhausted", "host_checksum",
     "ENGINES", "resolve_engine",

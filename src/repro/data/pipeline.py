@@ -70,7 +70,9 @@ def length_bucketed_batches(lengths: np.ndarray, batch_tokens: int,
                             ooc_device_slab_elems: Optional[int] = None,
                             ooc_fault_policy=None,
                             ooc_retry_policy=None,
-                            ooc_checkpoint_dir: Optional[str] = None):
+                            ooc_checkpoint_dir: Optional[str] = None,
+                            dist_mesh=None,
+                            dist_axis: str = "data"):
     """Order documents by length via two LSD counting passes, then pack.
 
     The ordering is an explicit LSD radix sort on the shared engine-selected
@@ -88,6 +90,14 @@ def length_bucketed_batches(lengths: np.ndarray, batch_tokens: int,
     degradation ladder and round-granular checkpointing, so a multi-round
     corpus sort that dies mid-merge resumes instead of restarting — the
     same restart-exactness posture as the token stream itself.
+
+    Corpora sharded across a device mesh route through the §5 distributed
+    exchange instead (``dist_mesh=``, exclusive with the ooc route): doc
+    indices ride ``core.distributed.make_distributed_sort`` as the value
+    payload over the ``dist_axis`` mesh axis (sample-sort splitters, one
+    fused counting pass per shard, capacity-padded all_to_all, bounded
+    splitter-refinement retries on overflow), and the per-shard valid
+    prefixes concatenate back into the global order.
     Returns (order, bucket_bounds):
     ``order`` is the sorted document order (longest-with-longest minimises
     padding waste), bounds delimit batches of at most ``batch_tokens``
@@ -104,7 +114,37 @@ def length_bucketed_batches(lengths: np.ndarray, batch_tokens: int,
         raise ValueError("ooc fault/retry/checkpoint options require "
                          "ooc_chunk_elems (resilience wraps the "
                          "out-of-core route)")
-    if ooc_chunk_elems is not None:
+    if dist_mesh is not None and ooc_chunk_elems is not None:
+        raise ValueError("dist_mesh and ooc_chunk_elems are exclusive "
+                         "routes (mesh-sharded vs host-chunked ordering)")
+    if dist_mesh is not None:
+        from repro.core.distributed import make_distributed_sort, valid_concat
+        nshards = dist_mesh.shape[dist_axis]
+        n = lengths.shape[0]
+        pad = (-n) % nshards
+        # sentinel-pad to a shardable length; pads sort last and are dropped
+        # below by index, so a real 0xFFFFFFFF length still buckets correctly
+        keys = np.concatenate(
+            [lengths, np.full(pad, np.uint32(0xFFFFFFFF), np.uint32)])
+        idx = np.arange(n + pad, dtype=np.int32)
+        # tiny shards: full-fan exchange capacity (slack = nshards caps each
+        # cell at the whole chunk) so a small corpus can never overflow on
+        # per-cell noise; the memory cost is n·nshards elements, trivial at
+        # this scale, and large shards keep the sampled-splitter default
+        n_local = (n + pad) // nshards
+        slack = float(nshards) if n_local < 1024 else 2.0
+        fn = jax.jit(make_distributed_sort(dist_mesh, dist_axis,
+                                           slack=slack, engine=engine))
+        out, order_out, stats = fn(jnp.asarray(keys), jnp.asarray(idx))
+        if bool(np.asarray(stats.overflow).any()):
+            raise RuntimeError("distributed length bucketing overflowed its "
+                               "exchange capacity after splitter-refinement "
+                               "retries (raise slack= or oversample=)")
+        sorted_all = valid_concat(out, stats.valid)
+        order_all = valid_concat(order_out, stats.valid)
+        keep = order_all < n
+        sorted_len, order = sorted_all[keep], order_all[keep]
+    elif ooc_chunk_elems is not None:
         from repro.core.outofcore import oocsort
         sorted_len, order = oocsort(
             lengths, ooc_chunk_elems, engine=engine,

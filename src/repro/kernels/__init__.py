@@ -92,6 +92,30 @@ dominates, so the tracked proxy is the argsort/ooc ratio trajectory in
 BENCH_ooc.json (``spill/...`` rows for the streamed regime) plus the
 structural census (``utils.hlo.launch_census``).
 
+Distributed-exchange accounting (``core.distributed``, the BENCH_dist.json
+device-scaling row): for n_local keys of b bytes (+ v payload bytes) per
+shard over P shards, per *executed* exchange attempt (attempts ledgered in
+``DistStats.exchange_attempts``; re-samples replay every row below):
+
+| exchange phase                  | ICI wire bytes per shard              |
+|---------------------------------|---------------------------------------|
+| splitter sample (all_gather)    | s·b·(P−1)  (s = oversample·refine^a)  |
+| key exchange (all_to_all)       | 2·n_local·b·(P−1)/P·slack  (1 send +  |
+|                                 |   1 receive crossing per key, padded) |
+| payload exchange (all_to_all)   | 2·n_local·v·(P−1)/P·slack  per leaf   |
+| count exchange + overflow psum  | O(P)·4  (sub-leading)                 |
+
+Device sweeps stay the single-shard tables above at n_local/C per chunk:
+the local chunk sorts pay the fused/adaptive bound, each attempt's shard
+bucketing is ONE fused counting pass (2·n_local·b sweeps), and the finish
+is one high-fan-in multiway merge (2·n_local·b·⌈log2(C·P)⌉ searchsorted
+sweeps) plus one 2-bucket compaction pass.  The sample term is what the
+oversampling ratio trades: s·P·b gathered bytes buy splitter rank error
+≈ n_local·P/(s·P) keys, so doubling s halves the skew the slack capacity
+must absorb — the ≤ 2x clustered-skew gate in
+tests/test_distributed_property.py pins the quality side, and
+``utils.hlo.collective_bytes`` reads the wire side off the lowered HLO.
+
 Failure & recovery accounting (``core.faults``, the fault-replay wall in
 tests/test_faults.py): resilience must not silently bend the tables above,
 so its costs are ledgered separately and the clean formulas stay exact.

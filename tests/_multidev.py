@@ -1,0 +1,76 @@
+"""Shared multi-device subprocess harness for the distributed-sort tests.
+
+Multi-device coverage on this CPU container comes from
+``--xla_force_host_platform_device_count=N`` (fake host devices).  That flag
+must be set before jax initialises, and it must NEVER leak into the main
+test process (tests/conftest.py: smoke tests and benches see the single real
+CPU device), so every multi-device test body runs in a fresh interpreter
+spawned here.  ``run_multidev`` prepends the shared mesh/import preamble,
+passes the device count via the child's environment, and asserts the body
+reached its final line (the ``MULTIDEV-OK`` print).
+
+The default device count honours an ambient
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` in the *parent*
+environment — that is how ``scripts/ci.sh dist`` re-runs the same wall at
+8 and 16 devices without duplicating test code.
+"""
+from __future__ import annotations
+
+import os
+import re
+import subprocess
+import sys
+import textwrap
+
+OK = "MULTIDEV-OK"
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# every body sees: numpy/jax, a 1-axis ("data",) mesh over all devices, the
+# distributed-sort API, and NDEV
+PREAMBLE = textwrap.dedent("""\
+    import sys
+    sys.path.insert(0, "src")
+    import numpy as np
+    import jax
+    import jax.numpy as jnp
+    from repro.core.distributed import (DistStats, make_distributed_sort,
+                                        valid_concat)
+    NDEV = jax.device_count()
+    mesh = jax.make_mesh((NDEV,), ("data",))
+""")
+
+
+def env_device_count(default: int = 8) -> int:
+    """Device count from an ambient XLA_FLAGS, else ``default``.
+
+    ``scripts/ci.sh dist`` exports the flag to widen the whole wall; the
+    plain fast/slow tiers have no ambient flag and get the default.
+    """
+    m = re.search(r"xla_force_host_platform_device_count=(\d+)",
+                  os.environ.get("XLA_FLAGS", ""))
+    return int(m.group(1)) if m else default
+
+
+def run_multidev(body: str, ndev: int | None = None, x64: bool = False,
+                 timeout: int = 900) -> str:
+    """Run ``body`` (appended to PREAMBLE) under ``ndev`` fake devices.
+
+    The body must simply fall off its end on success; uncaught exceptions
+    (including assert failures) surface with the child's stderr.  ``x64``
+    enables 64-bit jax types (uint64 keys) in the child.
+    """
+    ndev = env_device_count() if ndev is None else ndev
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={ndev}"
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    if x64:
+        env["JAX_ENABLE_X64"] = "1"
+    script = PREAMBLE + textwrap.dedent(body) + f'\nprint("{OK}")\n'
+    res = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=timeout,
+                         cwd=REPO_ROOT)
+    assert OK in res.stdout, (
+        f"multidev body failed (ndev={ndev})\n--- stdout ---\n{res.stdout}"
+        f"\n--- stderr ---\n{res.stderr[-4000:]}")
+    return res.stdout

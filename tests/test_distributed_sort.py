@@ -1,72 +1,79 @@
-"""Distributed sort (§5 analogue): multi-device tests run in a subprocess so
-the fake-device XLA flag never leaks into the rest of the suite."""
-import subprocess
-import sys
-import textwrap
-
+"""Distributed sort (§5 analogue): multi-device tests run in a subprocess
+(tests/_multidev.py) so the fake-device XLA flag never leaks into the rest
+of the suite; the splitter-selection unit tests run in-process."""
+import numpy as np
+import jax.numpy as jnp
 import pytest
 
-SCRIPT = textwrap.dedent("""
-    import os
-    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-    import sys; sys.path.insert(0, "src")
-    import numpy as np, jax, jax.numpy as jnp
-    from repro.core.distributed import make_distributed_sort
+from _multidev import run_multidev
 
-    mesh = jax.make_mesh((8,), ("data",))
-    rng = np.random.default_rng(7)
+BODY = """
+rng = np.random.default_rng(7)
+n = NDEV * (1 << 12)
 
-    def check(num_chunks, skew_ands, dtype=np.uint32, const=False):
-        fn = jax.jit(make_distributed_sort(mesh, "data", slack=2.0,
-                                           num_chunks=num_chunks))
-        info = np.iinfo(dtype)
-        x = rng.integers(0, info.max, 1 << 15, dtype=dtype, endpoint=True)
-        for _ in range(skew_ands):
-            x &= rng.integers(0, info.max, 1 << 15, dtype=dtype, endpoint=True)
-        if const:
-            x[:] = 42
-        out, valid, over = map(np.asarray, fn(jnp.asarray(x)))
-        per = out.reshape(8, -1)
-        got = np.concatenate([per[i][: valid[i]] for i in range(8)])
-        assert not over.any(), "capacity overflow"
-        assert np.array_equal(np.sort(x), got), f"mismatch chunks={num_chunks}"
+def check(num_chunks, skew_ands, const=False):
+    fn = jax.jit(make_distributed_sort(mesh, "data", slack=2.0,
+                                       num_chunks=num_chunks))
+    x = rng.integers(0, 2**32 - 1, n, dtype=np.uint32, endpoint=True)
+    for _ in range(skew_ands):
+        x &= rng.integers(0, 2**32 - 1, n, dtype=np.uint32, endpoint=True)
+    if const:
+        x[:] = 42
+    out, stats = fn(jnp.asarray(x))
+    assert not np.asarray(stats.overflow).any(), "capacity overflow"
+    assert np.asarray(stats.exchange_attempts)[0] == 1
+    got = valid_concat(out, stats.valid)
+    assert np.array_equal(np.sort(x), got), f"mismatch chunks={num_chunks}"
 
-    check(1, 0)
-    check(1, 3)           # skewed — splitters must rebalance
-    check(1, 0, const=True)   # zero entropy
-    check(4, 0)           # pipelined
-    check(4, 2)
+check(1, 0)
+check(1, 3)               # skewed — splitters must rebalance
+check(1, 0, const=True)   # zero entropy: tie-cycling spreads one key level
+check(4, 0)               # pipelined
+check(4, 2)
 
-    # degenerate: num_chunks > n_local leaves empty chunks and an empty
-    # splitter sample — the step == 0 guard must keep this traceable
-    fn = jax.jit(make_distributed_sort(mesh, "data", num_chunks=8))
-    x = rng.integers(0, 2**32, 32, dtype=np.uint32)   # n_local = 4 < chunks
-    out, valid, over = map(np.asarray, fn(jnp.asarray(x)))
-    assert valid.sum() == 0 and not over.any()
-    print("DIST-TEST-OK")
-""")
+# degenerate: num_chunks > n_local leaves empty chunks — must stay
+# traceable and report an empty exchange (valid = 0, zero attempts)
+fn = jax.jit(make_distributed_sort(mesh, "data", num_chunks=2 * NDEV))
+x = rng.integers(0, 2**32, NDEV, dtype=np.uint32)    # n_local = 1 < chunks
+out, stats = fn(jnp.asarray(x))
+assert np.asarray(stats.valid).sum() == 0
+assert not np.asarray(stats.overflow).any()
+assert np.asarray(stats.exchange_attempts)[0] == 0
+"""
 
 
 @pytest.mark.slow
-def test_distributed_sort_8dev():
-    res = subprocess.run([sys.executable, "-c", SCRIPT], capture_output=True,
-                         text=True, timeout=600, cwd=".")
-    assert "DIST-TEST-OK" in res.stdout, res.stdout + res.stderr
+@pytest.mark.dist
+def test_distributed_sort_multidev():
+    run_multidev(BODY)
 
 
 def test_select_splitters_degenerate_and_regular():
-    """_make_splitters guard: a gathered sample smaller than the shard count
-    must not stride by 0; it collapses to a single splitter level instead."""
-    import jax.numpy as jnp
-    import numpy as np
+    """Even-rank oversampled selection: degenerate samples (fewer than the
+    shard count) repeat sample values instead of striding by 0; regular
+    samples pick even quantiles."""
     from repro.core.distributed import _select_splitters
 
     # degenerate: 0, 1, 3 samples for 8 shards
-    for total in (0, 1, 3):
-        s = np.asarray(_select_splitters(
-            jnp.arange(5, 5 + total, dtype=jnp.uint32), 8))
-        assert s.shape == (7,)
-        assert np.all(s == (0 if total == 0 else 5))
-    # regular: stride = total // nshards, nshards - 1 picks
+    s = np.asarray(_select_splitters(jnp.zeros((0,), jnp.uint32), 8))
+    assert s.shape == (7,) and np.all(s == 0)
+    s = np.asarray(_select_splitters(jnp.full((1,), 5, jnp.uint32), 8))
+    assert s.shape == (7,) and np.all(s == 5)
+    s = np.asarray(_select_splitters(jnp.arange(5, 8, dtype=jnp.uint32), 8))
+    assert s.shape == (7,)
+    assert np.all(np.diff(s.astype(np.int64)) >= 0), "monotone"
+    assert set(s.tolist()) <= {5, 6, 7}, "drawn from the sample"
+    # regular: even quantiles — identical picks to the pre-oversample code
+    # on exact-multiple totals, so splitter behaviour is unchanged there
     s = np.asarray(_select_splitters(jnp.arange(64, dtype=jnp.uint32), 8))
     assert s.tolist() == [8, 16, 24, 32, 40, 48, 56]
+    # non-multiple total: picks span the WHOLE range (the step::step stride
+    # truncated the top total % nshards ranks and starved the last shard)
+    s = np.asarray(_select_splitters(jnp.arange(15, dtype=jnp.uint32), 8))
+    assert s.tolist() == [(i * 15) // 8 for i in range(1, 8)]
+
+
+def test_select_splitters_single_shard():
+    from repro.core.distributed import _select_splitters
+    s = np.asarray(_select_splitters(jnp.arange(9, dtype=jnp.uint32), 1))
+    assert s.shape == (0,)

@@ -229,6 +229,98 @@ def test_searchsorted_rank_byte_identical_to_counting_rank(rng):
                                 n=n, rank="bogus")
 
 
+def _abstract_mesh(n, name):
+    """AbstractMesh lets shard_map bodies trace/lower in-process with no
+    fake devices, so the exchange census runs in the fast tier."""
+    try:
+        return jax.sharding.AbstractMesh((n,), (name,))
+    except TypeError:                       # older ctor: ((name, size),)
+        return jax.sharding.AbstractMesh(((name, n),))
+
+
+def _dist_launches(n_local, num_chunks, max_attempts, cfg):
+    """Launch-site formula for the distributed exchange body:
+
+    per chunk one full hybrid sort (prologue + fused pass + local-sort
+    classes), per ATTEMPT SITE per chunk one shard-bucketing counting pass
+    (2 sites: prologue + fused), plus the single 2-bucket validity
+    compaction pass.  Retry sites are lax.cond-guarded, so sites scale with
+    ``max_attempts`` while *executed* launches scale with the attempts
+    ledger — same executed-vs-nominal idiom as the adaptive pass elision.
+    """
+    chunk = n_local // num_chunks
+    per_chunk_sort = 2 + len(local_sort_classes(chunk, cfg))
+    return (num_chunks * per_chunk_sort
+            + 2 * max_attempts * num_chunks + 2)
+
+
+def test_distributed_shard_body_launch_census():
+    """ONE pallas_call per counting pass inside the shard_map body — for
+    the local chunk sorts (their while bodies stay [1]), every
+    cond-guarded exchange attempt's bucketing pass, and the compaction
+    pass — at every (chunks, attempts) shape, keys-only and KV."""
+    from repro.core.distributed import make_distributed_sort
+
+    mesh = _abstract_mesh(8, "data")
+    n_local = 512
+    x = jnp.zeros(8 * n_local, jnp.uint32)
+    for num_chunks, max_attempts in ((1, 1), (1, 3), (2, 3)):
+        fn = make_distributed_sort(mesh, "data", cfg=TCFG, engine="kernel",
+                                   num_chunks=num_chunks,
+                                   max_attempts=max_attempts)
+        census = hlo.launch_census(jax.make_jaxpr(fn)(x))
+        expected = _dist_launches(n_local, num_chunks, max_attempts, TCFG)
+        assert census["total"] == expected, (num_chunks, max_attempts)
+        assert census["while_bodies"] == [1] * num_chunks, num_chunks
+    # KV payloads ride as one int32 rank per key: census unchanged
+    fn = make_distributed_sort(mesh, "data", cfg=TCFG, engine="kernel",
+                               num_chunks=2, max_attempts=3)
+    census = hlo.launch_census(
+        jax.make_jaxpr(lambda k, v: fn(k, v))(x, jnp.zeros_like(x)))
+    assert census["total"] == _dist_launches(n_local, 2, 3, TCFG)
+    assert census["while_bodies"] == [1, 1]
+
+
+def test_distributed_retry_replay_conserves_per_pass_launches():
+    """Raising max_attempts adds exactly 2 * num_chunks sites per extra
+    cond-guarded attempt (prologue + fused bucketing per chunk) and
+    nothing else — the replay re-uses the SAME counting-pass primitive,
+    no hidden launches or re-sorts."""
+    from repro.core.distributed import make_distributed_sort
+
+    mesh = _abstract_mesh(8, "data")
+    n_local, num_chunks = 512, 2
+    x = jnp.zeros(8 * n_local, jnp.uint32)
+    totals = []
+    for max_attempts in (1, 2, 3):
+        fn = make_distributed_sort(mesh, "data", cfg=TCFG, engine="kernel",
+                                   num_chunks=num_chunks,
+                                   max_attempts=max_attempts)
+        census = hlo.launch_census(jax.make_jaxpr(fn)(x))
+        assert census["while_bodies"] == [1] * num_chunks, max_attempts
+        totals.append(census["total"])
+    assert np.diff(totals).tolist() == [2 * num_chunks] * 2
+
+
+def test_distributed_kernel_engine_sort_free():
+    """Zero (stable)HLO sort ops in the whole lowered exchange under
+    engine="kernel": local sorts are hybrid, splitter selection merges
+    sorted samples (all_gather keeps rows intact), bucketing is the fused
+    counting pass, the finish is searchsorted-based multiway merge +
+    compaction.  The argsort engine keeps its sorts — the gate measures
+    the kernel path, not the lowering."""
+    from repro.core.distributed import make_distributed_sort
+
+    mesh = _abstract_mesh(8, "data")
+    x = jnp.zeros(8 * 512, jnp.uint32)
+    fn = make_distributed_sort(mesh, "data", cfg=TCFG, engine="kernel",
+                               num_chunks=2, max_attempts=2)
+    assert hlo.sort_op_count(jax.jit(fn).lower(x).as_text()) == 0
+    fn = make_distributed_sort(mesh, "data", cfg=TCFG, engine="argsort",
+                               max_attempts=2)
+    assert hlo.sort_op_count(jax.jit(fn).lower(x).as_text()) > 0
+
+
 def test_pallas_custom_call_counter_on_text():
     """The text-side counter recognises hardware custom-call spellings."""
     txt = ('%0 = stablehlo.custom_call @tpu_custom_call(%arg0)\n'

@@ -99,6 +99,25 @@ def test_length_bucketing_packs(rng):
         assert sl[a:b].max() * (b - a) <= 4096   # every bucket fits
 
 
+def test_length_bucketing_dist_mesh_route(rng):
+    """dist_mesh= routes the ordering through the §5 shard exchange (a
+    1-device mesh in-process: multi-device widths are covered by the
+    subprocess walls) and must reproduce the host route's packing exactly,
+    including a doc count that needs sentinel padding."""
+    lengths = rng.integers(1, 512, 203)          # not a multiple of nshards
+    mesh = jax.make_mesh((1,), ("data",))
+    order, bounds = length_bucketed_batches(lengths, batch_tokens=4096,
+                                            dist_mesh=mesh)
+    ref_order, ref_bounds = length_bucketed_batches(lengths,
+                                                    batch_tokens=4096)
+    assert sorted(order.tolist()) == list(range(203))
+    assert np.array_equal(lengths[order], lengths[ref_order])
+    assert bounds == ref_bounds
+    with pytest.raises(ValueError, match="exclusive"):
+        length_bucketed_batches(lengths, batch_tokens=4096, dist_mesh=mesh,
+                                ooc_chunk_elems=64)
+
+
 # ------------------------------ checkpoint ----------------------------------
 
 def test_checkpoint_roundtrip(tmp_path):
