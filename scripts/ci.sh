@@ -24,9 +24,15 @@
 #                          XLA flag is exported so tests/_multidev.py widens
 #                          every wall), plus the BENCH_dist.json device-
 #                          scaling smoke
+#   scripts/ci.sh analyze — static contract analyzer: trace every public
+#                          entry point and verify the declared launch
+#                          census, sort-free, donation, transfer-byte and
+#                          ref-hazard contracts + source lint (compile-only,
+#                          no kernel executes; writes ANALYSIS_report.json)
 #   scripts/ci.sh [full] — all stages back to back (the one-stop local
-#                          verify entry point; dist runs as its own CI job
-#                          and is not repeated in full)
+#                          verify entry point; dist and analyze run as their
+#                          own CI jobs — analyze is repeated in full because
+#                          it is seconds-cheap)
 #
 # Everything runs on a plain CPU host: the Pallas kernels execute in
 # interpret mode (the drivers default to it off-TPU), so the fused-engine
@@ -37,7 +43,8 @@ cd "$(dirname "$0")/.."
 
 STAGE="${1:-full}"
 if [[ "$STAGE" == "fast" || "$STAGE" == "slow" || "$STAGE" == "faults" \
-      || "$STAGE" == "dist" || "$STAGE" == "full" ]]; then
+      || "$STAGE" == "dist" || "$STAGE" == "analyze" \
+      || "$STAGE" == "full" ]]; then
   if [[ $# -gt 0 ]]; then shift; fi
 else
   STAGE="full"
@@ -63,6 +70,12 @@ run_stage() {
     exit "$rc"
   fi
 }
+
+if [[ "$STAGE" == "analyze" ]]; then
+  echo "=== static contract analyzer (compile-only) ==="
+  python -m repro.analysis --json ANALYSIS_report.json
+  exit 0
+fi
 
 if [[ "$STAGE" == "faults" ]]; then
   echo "=== fault-matrix smoke (one resilient run per fault site) ==="
@@ -103,9 +116,11 @@ if [[ "$STAGE" == "fast" ]]; then
   exit 0
 fi
 
-# faults runs as its own CI job; in the local one-stop `full` entry point it
-# slots between the tiers
+# faults and analyze run as their own CI jobs; in the local one-stop `full`
+# entry point they slot between the tiers
 if [[ "$STAGE" == "full" ]]; then
+  echo "=== static contract analyzer (compile-only) ==="
+  python -m repro.analysis --json ANALYSIS_report.json
   echo "=== fault-matrix smoke (one resilient run per fault site) ==="
   python scripts/fault_matrix.py
 fi

@@ -1,0 +1,31 @@
+"""Static analysis of the sort engines' kernel contracts.
+
+Nothing in this package executes device code: every property is read off
+the traced jaxpr (``jax.make_jaxpr``), the Pallas kernel bodies inside it,
+descriptor-table instances from the host planners, or the source AST.
+
+  ``trace``      jaxpr walking: pallas sites, ref events, collectives
+  ``expr``       restricted evaluator for the declared symbolic formulas
+  ``census``     launch-census verification (one launch per counting pass)
+  ``donation``   input_output_aliases audit (no silent ping-pong copies)
+  ``transfer``   HBM sweep / ICI wire bytes derived from operand shapes
+  ``refhazard``  scatter disjointness, RAW hazards, slice-extent bounds
+  ``lint``       AST rules (no jnp.sort in engines, no global PRNG, ...)
+  ``contracts``  the registry binding declarations to trace recipes
+
+``python -m repro.analysis`` runs the whole sweep (see ``__main__``).
+"""
+from repro.analysis.contracts import (CONTRACTS, REGISTRY, Contract,
+                                      ContractReport, dist_params,
+                                      expected_census, hybrid_params,
+                                      lsd_params, merge_params, run_all,
+                                      run_contract, spp_params, table_checks)
+from repro.analysis.lint import LintFinding, lint_source, run_lint
+
+__all__ = [
+    "CONTRACTS", "REGISTRY", "Contract", "ContractReport",
+    "dist_params", "expected_census", "hybrid_params", "lsd_params",
+    "merge_params", "spp_params",
+    "run_all", "run_contract", "table_checks",
+    "LintFinding", "lint_source", "run_lint",
+]

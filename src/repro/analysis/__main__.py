@@ -1,0 +1,79 @@
+"""CLI driver: ``python -m repro.analysis [--json REPORT.json]``.
+
+Runs every registered contract (census, sort-free, donation, transfer,
+link, ref-hazard), the descriptor-table interval checks, and the source
+lint; prints a per-check summary and exits non-zero on any finding.
+Compile-only — no kernel executes, so the sweep stays CI-fast.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="verify the declared kernel contracts against the "
+                    "traced jaxprs (no execution)")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write a machine-readable report to PATH")
+    ap.add_argument("--only", metavar="NAME", default=None,
+                    help="run a single contract by registry name")
+    args = ap.parse_args(argv)
+
+    from repro.analysis import contracts, lint
+
+    t0 = time.time()
+    if args.only:
+        if args.only not in contracts.REGISTRY:
+            ap.error(f"unknown contract {args.only!r}; have "
+                     f"{sorted(contracts.REGISTRY)}")
+        reports = [contracts.run_contract(contracts.REGISTRY[args.only])]
+    else:
+        reports = contracts.run_all()
+
+    src_root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    lint_findings = lint.run_lint(src_root)
+
+    failures = 0
+    for rep in reports:
+        nchecks = len(rep.checks)
+        if rep.ok:
+            print(f"  PASS {rep.name} ({nchecks} checks)")
+        else:
+            failures += len(rep.findings)
+            print(f"  FAIL {rep.name}")
+            for f in rep.findings:
+                print(f"       {f}")
+    if lint_findings:
+        failures += len(lint_findings)
+        print("  FAIL lint")
+        for f in lint_findings:
+            print(f"       {f}")
+    else:
+        print(f"  PASS lint ({len(lint._RULES)} rules)")
+
+    dt = time.time() - t0
+    verdict = "GREEN" if failures == 0 else f"{failures} finding(s)"
+    print(f"analysis: {len(reports)} contracts + lint in {dt:.1f}s — "
+          f"{verdict}")
+
+    if args.json:
+        payload = {
+            "ok": failures == 0,
+            "seconds": round(dt, 2),
+            "contracts": [rep.to_dict() for rep in reports],
+            "lint": [vars(f) for f in lint_findings],
+        }
+        with open(args.json, "w", encoding="utf-8") as fh:
+            json.dump(payload, fh, indent=2)
+        print(f"report written to {args.json}")
+    return 0 if failures == 0 else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,164 @@
+"""AST lint: source-level contract rules the jaxpr can't see per-call-site.
+
+Three rules, each scoped to the layer whose contract it protects:
+
+  R1 ``no-comparison-sort`` — the kernel-engine modules
+     (``src/repro/kernels/``) must never call ``sort``/``argsort``/
+     ``lexsort``: the engines are sort-free by construction and a smuggled
+     ``jnp.sort`` would silently satisfy every parity test while voiding
+     the paper's claim.  ``kernels/ref.py`` is the declared jnp oracle and
+     is allowlisted.
+  R2 ``no-global-prng`` — ``src/repro/data/`` threads explicit
+     ``np.random.Generator``s (the reproducibility contract of the data
+     layer); module-level ``np.random.<draw>`` or ``random.<draw>`` calls
+     are forbidden (``default_rng``/``Generator``/``SeedSequence``
+     constructors are the sanctioned spellings).
+  R3 ``undonated-dispatch`` — any function taking alternate ping-pong
+     buffers (an ``alt_*`` parameter) that builds a ``pl.pallas_call`` must
+     pass ``input_output_aliases``; forgetting it is the silent-copy bug
+     the donation audit catches at trace time, caught here at the source.
+"""
+from __future__ import annotations
+
+import ast
+import os
+from dataclasses import dataclass
+from typing import List, Sequence
+
+SORT_NAMES = frozenset({"sort", "argsort", "lexsort", "sort_complex",
+                        "msort"})
+PRNG_OK = frozenset({"default_rng", "Generator", "SeedSequence",
+                     "BitGenerator", "PCG64", "Philox", "RandomState"})
+_PRNG_MODULES = ("np.random", "numpy.random", "random")
+SORT_ALLOWLIST = ("ref.py",)
+
+
+@dataclass
+class LintFinding:
+    rule: str
+    path: str
+    line: int
+    message: str
+
+    def __str__(self):
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+
+
+def _dotted(node: ast.AST) -> str:
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def lint_no_comparison_sort(tree: ast.AST, path: str) -> List[LintFinding]:
+    out = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call) and \
+                isinstance(node.func, ast.Attribute) and \
+                node.func.attr in SORT_NAMES:
+            out.append(LintFinding(
+                "no-comparison-sort", path, node.lineno,
+                f"call to .{node.func.attr}() in a kernel-engine module "
+                f"(sort-free contract; use kernels/ref.py for oracles)"))
+    return out
+
+
+def lint_no_global_prng(tree: ast.AST, path: str) -> List[LintFinding]:
+    out = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call):
+            dotted = _dotted(node.func)
+            for mod in _PRNG_MODULES:
+                prefix = mod + "."
+                if dotted.startswith(prefix):
+                    leaf = dotted[len(prefix):].split(".")[0]
+                    if leaf not in PRNG_OK:
+                        out.append(LintFinding(
+                            "no-global-prng", path, node.lineno,
+                            f"global-PRNG call {dotted}() — thread an "
+                            f"explicit np.random.Generator instead"))
+        elif isinstance(node, ast.ImportFrom) and \
+                node.module in ("numpy.random", "random"):
+            bad = [a.name for a in node.names if a.name not in PRNG_OK]
+            if bad:
+                out.append(LintFinding(
+                    "no-global-prng", path, node.lineno,
+                    f"imports global-PRNG names {bad} from {node.module}"))
+    return out
+
+
+def _has_alt_param(fn: ast.AST) -> bool:
+    args = fn.args
+    every = (args.posonlyargs + args.args + args.kwonlyargs +
+             ([args.vararg] if args.vararg else []))
+    return any(a.arg.startswith("alt_") for a in every)
+
+
+def lint_donated_dispatch(tree: ast.AST, path: str) -> List[LintFinding]:
+    out = []
+    for fn in ast.walk(tree):
+        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        if not _has_alt_param(fn):
+            continue
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Call) and \
+                    _dotted(node.func).endswith("pallas_call"):
+                kw = {k.arg for k in node.keywords}
+                if "input_output_aliases" not in kw:
+                    out.append(LintFinding(
+                        "undonated-dispatch", path, node.lineno,
+                        f"{fn.name}() takes alt_* ping-pong buffers but its "
+                        f"pallas_call passes no input_output_aliases — the "
+                        f"alternate buffer will silently copy"))
+    return out
+
+
+_RULES = {
+    "no-comparison-sort": lint_no_comparison_sort,
+    "no-global-prng": lint_no_global_prng,
+    "undonated-dispatch": lint_donated_dispatch,
+}
+
+
+def lint_source(src: str, path: str,
+                rules: Sequence[str] = tuple(_RULES)) -> List[LintFinding]:
+    """Lint one source string under the named rules (mutation-test entry)."""
+    tree = ast.parse(src, filename=path)
+    out: List[LintFinding] = []
+    for rule in rules:
+        out.extend(_RULES[rule](tree, path))
+    return out
+
+
+def lint_file(path: str, rules: Sequence[str]) -> List[LintFinding]:
+    with open(path, "r", encoding="utf-8") as f:
+        return lint_source(f.read(), path, rules)
+
+
+def run_lint(src_root: str) -> List[LintFinding]:
+    """Lint the repo layers under their scoped rules.
+
+    ``src_root`` is the ``src/repro`` package directory.  Kernel-engine
+    modules get R1 (+R3); the data layer gets R2.
+    """
+    out: List[LintFinding] = []
+    kdir = os.path.join(src_root, "kernels")
+    for name in sorted(os.listdir(kdir)):
+        if not name.endswith(".py"):
+            continue
+        rules = ["undonated-dispatch"]
+        if name not in SORT_ALLOWLIST:
+            rules.append("no-comparison-sort")
+        out.extend(lint_file(os.path.join(kdir, name), rules))
+    ddir = os.path.join(src_root, "data")
+    for name in sorted(os.listdir(ddir)):
+        if name.endswith(".py"):
+            out.extend(lint_file(os.path.join(ddir, name),
+                                 ["no-global-prng"]))
+    return out

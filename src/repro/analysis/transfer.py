@@ -1,0 +1,122 @@
+"""Static transfer accounting: derive bytes from operand shapes, diff tables.
+
+The §4.3/§4.4 tables in ``kernels/__init__`` claim a hybrid sort moves
+exactly ``(2·⌈k/d⌉+1)·n·b`` key bytes (+ ``2·⌈k/d⌉·n·v`` value bytes) and a
+merge round ``2·buf·(b+v)``.  This pass re-derives those numbers from the
+*trace*: for every declared sweep kernel, each full-length buffer operand
+the kernel actually ``get``s is one read sweep and each full-length output
+it ``swap``s (without reading — accumulators are read-modify-write and
+excluded) is one write sweep; a while-body site multiplies by the nominal
+pass count.  The derived total must equal the declared formula exactly — no
+tolerance, the tables are closed-form.
+
+Distributed link traffic is derived the same way from collective-primitive
+result shapes (``trace.collective_link_bytes``) with the wire weights of
+``utils.hlo.collective_bytes``, and diffed against the ICI table's formula.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, List
+
+from repro.analysis import expr
+from repro.analysis.trace import PallasSite, ref_access_counts
+
+
+def _size(av) -> int:
+    size = 1
+    for d in av.shape:
+        size *= int(d)
+    return size
+
+
+def site_sweep_bytes(site: PallasSite, n_pad: int) -> Dict[str, List]:
+    """Read/write sweep breakdown of one site over its n_pad-sized buffers.
+
+    A buffer operand/output counts iff its total element count equals the
+    ping-pong padded length ``n_pad`` (the fused kernel sees keys flat, the
+    histogram prologue sees the same buffer tiled (T, kpb) — both count).
+    Outputs that the kernel also reads (gets > 0) are accumulator tables
+    (histogram/carry), not HBM sweeps, and are excluded.
+    """
+    counts = ref_access_counts(site.kernel_jaxpr)
+    reads, writes = [], []
+    for i in range(site.num_scalars, site.num_scalars + site.num_inputs):
+        av = site.in_avals[i]
+        gets, _ = counts.get(site.root_of_operand(i), (0, 0))
+        if _size(av) == n_pad and gets > 0:
+            reads.append((i, av))
+    for j, av in enumerate(site.out_avals):
+        gets, swaps = counts.get(site.root_of_output(j), (0, 0))
+        if _size(av) == n_pad and swaps > 0 and gets == 0:
+            writes.append((j, av))
+    return {"reads": reads, "writes": writes}
+
+
+def derive_hbm_bytes(sites: List[PallasSite], decl: Dict,
+                     params: Dict) -> Dict:
+    """Sum sweep bytes over the declared sweep kernels of a trace.
+
+    While-body sites multiply by the nominal ``passes`` parameter — the
+    trace contains the loop body once, the schedule runs it ``⌈k/d⌉`` times
+    (the same executed-vs-nominal convention as the launch census; adaptive
+    elision only ever lowers the real traffic below this bound).
+    """
+    n_pad = int(params["n_pad"])
+    passes = int(params.get("passes", 1))
+    sweep_kernels = set(decl["sweep_kernels"])
+    total = 0
+    per_site = []
+    for site in sites:
+        if site.name not in sweep_kernels:
+            continue
+        sw = site_sweep_bytes(site, n_pad)
+        mult = passes if site.in_while else 1
+        site_bytes = mult * sum(
+            _size(av) * av.dtype.itemsize
+            for _, av in sw["reads"] + sw["writes"])
+        total += site_bytes
+        per_site.append({
+            "kernel": site.name, "in_while": site.in_while, "mult": mult,
+            "reads": len(sw["reads"]), "writes": len(sw["writes"]),
+            "bytes": site_bytes})
+    return {"total": total, "sites": per_site}
+
+
+def check_hbm_bytes(sites: List[PallasSite], decl: Dict,
+                    params: Dict) -> List[str]:
+    derived = derive_hbm_bytes(sites, decl, params)
+    want = expr.evaluate(decl["bytes"], params)
+    findings = []
+    if derived["total"] != int(want):
+        findings.append(
+            f"derived HBM sweep bytes {derived['total']} != declared "
+            f"{decl['bytes']!r} = {int(want)} "
+            f"(sites: {derived['sites']})")
+    if not derived["sites"]:
+        findings.append("no sweep-kernel sites found for transfer accounting")
+    return findings
+
+
+def check_link_bytes(jaxpr_collectives, decl: Dict, params: Dict) -> List[str]:
+    """Diff jaxpr-derived wire bytes/counts against the ICI table formulas.
+
+    ``jaxpr_collectives`` is the (bytes_by_kind, counts_by_kind) pair from
+    ``trace.collective_link_bytes``.
+    """
+    bytes_by, counts = jaxpr_collectives
+    findings: List[str] = []
+    for kind, formula in decl.get("collective_counts", {}).items():
+        want = int(expr.evaluate(formula, params))
+        got = counts.get(kind, 0)
+        if got != want:
+            findings.append(
+                f"{kind} site count {got} != declared {formula!r} = {want}")
+    if "link_bytes" in decl:
+        want = float(expr.evaluate(decl["link_bytes"], params))
+        got = bytes_by.get("total", 0.0)
+        if not math.isclose(got, want, rel_tol=1e-9, abs_tol=0.5):
+            findings.append(
+                f"derived wire bytes {got} != declared formula = {want} "
+                f"(by kind: { {k: v for k, v in bytes_by.items()} })")
+    return findings

@@ -347,3 +347,32 @@ def _shard_map(fn, mesh, in_specs, out_specs):
     from jax.experimental.shard_map import shard_map
     return shard_map(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
                      check_rep=False)
+
+
+# --- contract declaration (verified by repro.analysis; see analysis/contracts)
+# Shard-body census: per chunk one full hybrid sort, per cond-guarded attempt
+# per chunk one bucketing counting pass (2 sites), plus the 2-bucket validity
+# compaction.  Link bytes re-derive the ICI table of kernels/__init__ from
+# the collective-primitive result shapes: per attempt per chunk one keys +
+# ``leaves`` payload + one counts all_to_all at capacity padding, per attempt
+# one splitter-sample all_gather (samp lists the gathered per-shard sample
+# lengths) and one scalar overflow psum.
+ANALYSIS_CONTRACT = {
+    "entry": "repro.core.distributed.make_distributed_sort",
+    "census": {
+        "launch_total": "chunks * (2 + classes)"
+                        " + 2 * attempts * chunks + 2",
+        "while_body_launches": "[1] * chunks",
+    },
+    "sort_free": True,
+    "link": {
+        "collective_counts": {
+            "all_to_all": "attempts * chunks * (2 + leaves)",
+            "all_gather": "attempts",
+            "psum": "attempts",
+        },
+        "link_bytes": "((P - 1) / P) * ("
+                      "attempts * chunks * P * (cap * (kb + vb) + 4)"
+                      " + kb * P * sum(samp) + attempts * 2 * 4)",
+    },
+}

@@ -444,3 +444,24 @@ def hybrid_sort(keys: jnp.ndarray, values: Any = None,
     if values is None:
         return (out_keys, stats) if return_stats else out_keys
     return (out_keys, vals, stats) if return_stats else (out_keys, vals)
+
+
+# --- contract declaration (verified by repro.analysis; see analysis/contracts)
+# Formulas are symbolic in the structural parameters the analyzer derives per
+# (n, cfg): classes = len(local_sort_classes(n, cfg)), passes = ⌈k/d⌉ nominal
+# schedule slots, n_pad = fused.pad_length(n, cfg.kpb), kb/vb = key/value
+# bytes, vals = payload leaves, g_max/B = descriptor rows / super-step width.
+ANALYSIS_CONTRACT = {
+    "entry": "repro.core.hybrid.hybrid_sort",
+    "census": {
+        "launch_total": "2 + classes",
+        "while_body_launches": "[1]",
+        "fused_grid": "ceil_div(g_max, B)",
+    },
+    "sort_free": True,
+    "donation": {"_fused_pass_kernel": "1 + vals"},
+    "transfer": {
+        "sweep_kernels": ["_hist_kernel", "_fused_pass_kernel"],
+        "bytes": "(2 * passes + 1) * n_pad * kb + 2 * passes * n_pad * vb",
+    },
+}

@@ -126,3 +126,22 @@ def lsd_sort(keys: jnp.ndarray, values: Any = None, d: int = 5,
         passes = model.num_digits(max(hi - lo, 0), d)
         return (*((result,) if values is None else result), passes)
     return result
+
+
+# --- contract declaration (verified by repro.analysis; see analysis/contracts)
+# The LSD driver unrolls its schedule: ⌈k/d⌉ fused launches + one prologue
+# histogram, no device loop, every fused launch on the batched ⌈g_max/B⌉ grid.
+ANALYSIS_CONTRACT = {
+    "entry": "repro.core.lsd.lsd_sort",
+    "census": {
+        "launch_total": "passes + 1",
+        "while_body_launches": "[]",
+        "fused_grid": "ceil_div(g_max, B)",
+    },
+    "sort_free": True,
+    "donation": {"_fused_pass_kernel": "1 + vals"},
+    "transfer": {
+        "sweep_kernels": ["_hist_kernel", "_fused_pass_kernel"],
+        "bytes": "(2 * passes + 1) * n_pad * kb + 2 * passes * n_pad * vb",
+    },
+}

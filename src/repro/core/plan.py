@@ -359,3 +359,23 @@ def single_pass_partition(ids: jnp.ndarray, num_buckets: int,
     perm = perm_pad[:m]
     dest = invert_permutation(perm)
     return dest, perm, hist0[0, :num_buckets]
+
+
+# --- contract declaration (verified by repro.analysis; see analysis/contracts)
+# One standalone partition = prologue histogram + ONE fused launch; the iota
+# permutation payload rides as one value leaf (vals = 1), so the pass moves
+# (2·1+1) key sweeps + 2 payload sweeps over the padded buffer.
+ANALYSIS_CONTRACT = {
+    "entry": "repro.core.plan.single_pass_partition",
+    "census": {
+        "launch_total": "2",
+        "while_body_launches": "[]",
+        "fused_grid": "ceil_div(g_max, B)",
+    },
+    "sort_free": True,
+    "donation": {"_fused_pass_kernel": "1 + vals"},
+    "transfer": {
+        "sweep_kernels": ["_hist_kernel", "_fused_pass_kernel"],
+        "bytes": "(2 * passes + 1) * n_pad * kb + 2 * passes * n_pad * vb",
+    },
+}

@@ -179,3 +179,23 @@ def length_bucketed_batches(lengths: np.ndarray, batch_tokens: int,
             cur_max, cur_n = cand_max, cur_n + 1
     bounds.append(len(sorted_len))
     return order, bounds
+
+
+# --- contract declaration (verified by repro.analysis; see analysis/contracts)
+# Length bucketing partitions ids into 256 buckets with ONE counting pass
+# (prologue histogram + fused launch), iota payload as the value leaf — the
+# data-pipeline consumer of the same partition primitive.
+ANALYSIS_CONTRACT = {
+    "entry": "repro.core.segmented.counting_partition",
+    "census": {
+        "launch_total": "2",
+        "while_body_launches": "[]",
+        "fused_grid": "ceil_div(g_max, B)",
+    },
+    "sort_free": True,
+    "donation": {"_fused_pass_kernel": "1 + vals"},
+    "transfer": {
+        "sweep_kernels": ["_hist_kernel", "_fused_pass_kernel"],
+        "bytes": "(2 * passes + 1) * n_pad * kb + 2 * passes * n_pad * vb",
+    },
+}

@@ -34,6 +34,11 @@ reduction, and the whole sort pays exactly one extra 1R prologue sweep
 ``3·⌈k/5⌉·n·b`` for the CUB-style LSD baseline — the paper's 1.6–1.75x
 traffic headline.  Bookkeeping arrays (M2–M5 of §4.5) are O(n/∂̂ · r) and do
 not change the leading term.
+[verified-by: ``repro.analysis`` contracts ``hybrid_sort`` /
+``hybrid_sort_kv`` / ``lsd_sort`` / ``single_pass_partition``, checks
+``transfer.hbm_bytes`` (the formula above, re-derived from traced operand
+shapes), ``census`` (one launch per pass) and ``donation`` (the ping-pong
+aliases the 1R+1W claim depends on); ``python -m repro.analysis``]
 
 Entropy-adaptive row (``core.hybrid`` adaptive schedule + ``core.bijection``
 compressed keys): only *executed* passes move bytes — statically dead bits
@@ -91,6 +96,11 @@ for any real tile size.  On this CPU container interpret-mode overhead
 dominates, so the tracked proxy is the argsort/ooc ratio trajectory in
 BENCH_ooc.json (``spill/...`` rows for the streamed regime) plus the
 structural census (``utils.hlo.launch_census``).
+[verified-by: contracts ``ooc_chunk_sort`` / ``ooc_merge_round`` /
+``ooc_slab_sweep`` — ``transfer.hbm_bytes`` pins the 2·(b+v) device sweep
+per merge/slab row, ``census`` the one-launch-per-round gate, and the
+``descriptor_tables`` report proves the merge-path/spill tables write
+disjoint, exactly-covering output ranges]
 
 Distributed-exchange accounting (``core.distributed``, the BENCH_dist.json
 device-scaling row): for n_local keys of b bytes (+ v payload bytes) per
@@ -115,6 +125,10 @@ oversampling ratio trades: s·P·b gathered bytes buy splitter rank error
 must absorb — the ≤ 2x clustered-skew gate in
 tests/test_distributed_property.py pins the quality side, and
 ``utils.hlo.collective_bytes`` reads the wire side off the lowered HLO.
+[verified-by: contract ``distributed_shard`` — ``transfer.link_bytes``
+re-derives every row from the collective-primitive result shapes in the
+traced shard body (per-kind site counts included) and diffs them against
+the declared formula in ``core.distributed.ANALYSIS_CONTRACT``]
 
 Failure & recovery accounting (``core.faults``, the fault-replay wall in
 tests/test_faults.py): resilience must not silently bend the tables above,

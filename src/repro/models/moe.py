@@ -156,3 +156,25 @@ def moe_layer(params, x, cfg, *, groups: int = 1):
             x_flat.reshape(g, tg, d), ids.reshape(g, tg, cfg.top_k),
             wts.reshape(g, tg, cfg.top_k), params, cfg.num_experts, capacity)
     return out.reshape(b, s, d), aux
+
+
+# --- contract declaration (verified by repro.analysis; see analysis/contracts)
+# The sort-path MoE dispatch is one capacity_dispatch per token group: ONE
+# counting pass (prologue histogram + fused launch) with the iota permutation
+# riding as the single value leaf — the same contract shape as
+# plan.single_pass_partition, declared here because the dispatch is the
+# consumer whose traffic budget depends on it.
+ANALYSIS_CONTRACT = {
+    "entry": "repro.core.segmented.capacity_dispatch",
+    "census": {
+        "launch_total": "2",
+        "while_body_launches": "[]",
+        "fused_grid": "ceil_div(g_max, B)",
+    },
+    "sort_free": True,
+    "donation": {"_fused_pass_kernel": "1 + vals"},
+    "transfer": {
+        "sweep_kernels": ["_hist_kernel", "_fused_pass_kernel"],
+        "bytes": "(2 * passes + 1) * n_pad * kb + 2 * passes * n_pad * vb",
+    },
+}

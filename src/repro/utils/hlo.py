@@ -26,10 +26,15 @@ _DTYPE_BYTES = {
 }
 
 _SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+# async collectives split into ``-start``/``-done`` pairs: the start op's
+# result is a tuple carrying operand + output + context buffers (summing it
+# double-counts), the done op's result is the true output.  The suffix is
+# captured so bytes can be read off done/plain lines and sites counted off
+# start/plain lines — each pair exactly once either way.
 _COLL_RE = re.compile(
     r"=\s*(\([^)]*\)|\S+)\s+"
     r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
-    r"(?:-start)?\(")
+    r"(-start|-done)?\(")
 _GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
 _GROUPS_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
 
@@ -58,15 +63,27 @@ def _group_size(line: str, default: int) -> int:
 
 
 def collective_bytes(hlo_text: str, num_devices: int) -> Dict[str, float]:
-    """Per-chip wire bytes by collective kind (+ 'total')."""
+    """Per-chip wire bytes by collective kind (+ 'total').
+
+    Async pairs are counted once, at the ``-done`` op (its result is the
+    true output shape; the ``-start`` result tuple also carries operand and
+    context buffers).  ``replica_groups`` usually annotates only the start
+    line, so the group size seen at a start is carried to its done.
+    """
     out: Dict[str, float] = defaultdict(float)
+    start_groups: Dict[str, int] = {}
     for line in hlo_text.splitlines():
         m = _COLL_RE.search(line)
         if not m:
             continue
-        shape_str, kind = m.group(1), m.group(2)
+        shape_str, kind, suffix = m.group(1), m.group(2), m.group(3) or ""
+        if suffix == "-start":
+            start_groups[kind] = _group_size(line, num_devices)
+            continue
         size = _shape_bytes(shape_str)
-        p = max(_group_size(line, num_devices), 1)
+        default_p = (start_groups.pop(kind, num_devices)
+                     if suffix == "-done" else num_devices)
+        p = max(_group_size(line, default_p), 1)
         frac = (p - 1) / p
         if kind == "all-reduce":
             wire = 2 * size * frac
@@ -118,10 +135,12 @@ def sort_op_count(hlo_text: str) -> int:
 
 
 def collective_counts(hlo_text: str) -> Dict[str, int]:
+    """Collective sites by kind; an async ``-start``/``-done`` pair is one
+    site (counted at the start, where the op is issued)."""
     out: Dict[str, int] = defaultdict(int)
     for line in hlo_text.splitlines():
         m = _COLL_RE.search(line)
-        if m:
+        if m and (m.group(3) or "") != "-done":
             out[m.group(2)] += 1
     return dict(out)
 

@@ -17,8 +17,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.analysis import contracts as an
 from repro.core import SortConfig, hybrid_sort, lsd_sort, model, plan
-from repro.core.hybrid import local_sort_classes
 from repro.core.outofcore import _sort_chunk, merge_round
 from repro.core.segmented import counting_partition
 from repro.kernels import merge as kmerge
@@ -29,8 +29,10 @@ TCFG = SortConfig(d=8, kpb=64, local_threshold=48, merge_threshold=32)
 
 
 def _hybrid_launches(n, cfg):
-    """Prologue + fused pass + one bitonic launch per local-sort class."""
-    return 2 + len(local_sort_classes(n, cfg))
+    """Prologue + fused pass + one bitonic launch per local-sort class —
+    read from the registered contract's symbolic formula, so the test and
+    the analyzer verify the SAME declaration."""
+    return an.expected_census("hybrid_sort", an.hybrid_params(n, cfg))["total"]
 
 
 def test_hybrid_fused_engine_one_launch_per_pass():
@@ -83,7 +85,8 @@ def test_lsd_fused_engine_launch_count():
         jx = jax.make_jaxpr(
             lambda a: lsd_sort(a, d=d, engine="kernel", kpb=512,
                                step_batch=4))(x)
-        assert hlo.pallas_launch_count(jx) == model.num_digits(32, d) + 1, d
+        want = an.expected_census("lsd_sort", an.lsd_params(2048, d, 512, 4))
+        assert hlo.pallas_launch_count(jx) == want["total"], d
         g_max = plan.max_region_blocks(2048, 512, 1)
         assert all(g == (-(-g_max // 4),)
                    for g in hlo.pallas_grid_sizes(jx)[1:]), d
@@ -94,7 +97,8 @@ def test_counting_partition_fused_launch_count():
     ids = jnp.zeros(1000, jnp.int32)
     jx = jax.make_jaxpr(
         lambda i: counting_partition(i, 8, engine="kernel"))(ids)
-    assert hlo.pallas_launch_count(jx) == 2
+    want = an.expected_census("single_pass_partition", an.spp_params(1000, 8))
+    assert hlo.pallas_launch_count(jx) == want["total"]
 
 
 def test_jnp_engines_launch_free():
@@ -247,11 +251,11 @@ def _dist_launches(n_local, num_chunks, max_attempts, cfg):
     compaction pass.  Retry sites are lax.cond-guarded, so sites scale with
     ``max_attempts`` while *executed* launches scale with the attempts
     ledger — same executed-vs-nominal idiom as the adaptive pass elision.
+    The formula lives in ``core.distributed.ANALYSIS_CONTRACT``; this reads
+    it through the registry so test and analyzer cannot drift.
     """
-    chunk = n_local // num_chunks
-    per_chunk_sort = 2 + len(local_sort_classes(chunk, cfg))
-    return (num_chunks * per_chunk_sort
-            + 2 * max_attempts * num_chunks + 2)
+    params = an.dist_params(8, n_local, num_chunks, max_attempts, cfg)
+    return an.expected_census("distributed_shard", params)["total"]
 
 
 def test_distributed_shard_body_launch_census():

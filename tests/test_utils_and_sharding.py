@@ -42,6 +42,32 @@ def test_collective_counts():
                  "all-to-all": 1, "collective-permute": 1}
 
 
+# async collectives split into -start/-done: the start result is a tuple
+# (operand, output, context buffers) — summing it would double-count — and
+# replica_groups usually annotates only the start line
+HLO_ASYNC = """
+  %cps = (u32[10]{0}, u32[10]{0}, u32[], u32[]) collective-permute-start(%c), source_target_pairs={{0,1}}
+  %cpd = u32[10]{0} collective-permute-done(%cps)
+  %ags = (bf16[8,128]{1,0}, bf16[8,2048]{1,0}) all-gather-start(%y), replica_groups=[32,16]<=[512]
+  %agd = bf16[8,2048]{1,0} all-gather-done(%ags)
+  %ar = f32[64]{0} all-reduce(%x), replica_groups={{0,1}}
+"""
+
+
+def test_async_collective_pairs_count_once():
+    """-start/-done pairs: bytes from the done op's true output shape (at
+    the start line's group size), sites counted at the start — one each,
+    never zero, never double."""
+    out = collective_bytes(HLO_ASYNC, 512)
+    assert abs(out["collective-permute"] - 40) < 1          # one hop, 10*u32
+    # all-gather output 8*2048*bf16, group size 16 carried from the start
+    assert abs(out["all-gather"] - 8 * 2048 * 2 * 15 / 16) < 1
+    assert abs(out["all-reduce"] - 64 * 4 * 2 * 0.5) < 1    # sync op intact
+    assert out["total"] == sum(v for k, v in out.items() if k != "total")
+    assert collective_counts(HLO_ASYNC) == {
+        "collective-permute": 1, "all-gather": 1, "all-reduce": 1}
+
+
 def test_roofline_terms():
     r = Roofline(arch="a", shape="s", step="train", mesh="pod", chips=256,
                  flops_per_chip=197e12, hbm_bytes_per_chip=819e9,
